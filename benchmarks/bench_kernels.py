@@ -1,0 +1,135 @@
+"""Kernel micro-benchmarks (deliverable d).
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+absolute wall-times are NOT TPU predictions. What this benchmark reports:
+
+  * correctness deltas vs the pure-jnp oracle at benchmark shapes
+  * analytic FLOPs / bytes / arithmetic intensity per kernel shape
+    (the numbers the BlockSpec tiling was designed around)
+  * wall time of the jnp reference (the XLA-compiled path actually used
+    for CPU smoke runs)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rwkv_scan.ops import wkv
+from repro.kernels.rwkv_scan.ref import wkv_ref
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.max(np.abs(a - b) / (np.abs(b).max() + 1e-6)))
+
+
+def _time(fn, *args, repeats=3):
+    out = jax.block_until_ready(fn(*args))        # compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return out, sorted(ts)[len(ts) // 2]
+
+
+def run(report) -> None:
+    key = jax.random.key(0)
+
+    # ---------------------------------------------------- flash attention
+    B, H, S, hd = 1, 4, 512, 64
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    flops = 4.0 * B * H * S * S * hd / 2            # causal halves the work
+    bytes_ = 4 * (3 * B * H * S * hd + B * H * S * hd)
+    ker = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                  bq=128, bk=128))
+    ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    out_k, _ = _time(ker, q, k, v, repeats=1)       # interpret mode: slow
+    out_r, t_ref = _time(ref, q, k, v)
+    report.row("kernels/flash_attention/rel_err", _rel_err(out_k, out_r),
+               "", f"B{B}H{H}S{S}hd{hd}")
+    report.row("kernels/flash_attention/ref_us", round(t_ref * 1e6, 1),
+               "us_per_call",
+               f"flops={flops:.3g} AI={flops/bytes_:.1f} flop/byte")
+    report.check("kernels/flash_attention/allclose",
+                 _rel_err(out_k, out_r) < 2e-3, "interpret vs oracle")
+
+    # ---------------------------------------------------- decode attention
+    B, Hq, Hkv, T, hd = 4, 8, 2, 2048, 64
+    q1 = jax.random.normal(key, (B, Hq, hd), jnp.float32)
+    k1 = jax.random.normal(key, (B, Hkv, T, hd), jnp.float32)
+    v1 = jax.random.normal(key, (B, Hkv, T, hd), jnp.float32)
+    nv = jnp.int32(T - 3)
+    flops = 4.0 * B * Hq * T * hd
+    bytes_ = 4 * (2 * B * Hkv * T * hd)             # KV reads dominate
+    ker = jax.jit(lambda q, k, v: decode_attention(q, k, v, nv, bk=256)[0])
+    ref = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, nv)[0])
+    out_k, _ = _time(ker, q1, k1, v1, repeats=1)
+    out_r, t_ref = _time(ref, q1, k1, v1)
+    report.row("kernels/decode_attention/rel_err", _rel_err(out_k, out_r),
+               "", f"B{B}Hq{Hq}Hkv{Hkv}T{T}")
+    report.row("kernels/decode_attention/ref_us", round(t_ref * 1e6, 1),
+               "us_per_call",
+               f"AI={flops/bytes_:.2f} flop/byte (memory-bound by design)")
+    report.check("kernels/decode_attention/allclose",
+                 _rel_err(out_k, out_r) < 2e-3, "interpret vs oracle")
+
+    # ---------------------------------------------------- rwkv wkv scan
+    B, T, H, hd = 2, 256, 4, 32          # layout (B, T, H, hd)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, T, H, hd), jnp.float32)
+    vv = jax.random.normal(ks[2], (B, T, H, hd), jnp.float32)
+    # data-dependent decay in (0,1): w = exp(-exp(x)) as in RWKV6
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd),
+                                           jnp.float32)))
+    u = jax.random.normal(ks[4], (H, hd), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    flops = 4.0 * B * H * T * hd * hd
+    bytes_ = 4 * (4 * B * H * T * hd + B * H * hd * hd)
+    ker = jax.jit(lambda r, k, v, w: wkv(r, k, v, w, u, s0, bt=64)[0])
+    ref = jax.jit(lambda r, k, v, w: wkv_ref(r, k, v, w, u, s0)[0])
+    out_k, _ = _time(ker, r, kk, vv, w, repeats=1)
+    out_r, t_ref = _time(ref, r, kk, vv, w)
+    report.row("kernels/rwkv_scan/rel_err", _rel_err(out_k, out_r), "",
+               f"B{B}H{H}T{T}hd{hd}")
+    report.row("kernels/rwkv_scan/ref_us", round(t_ref * 1e6, 1),
+               "us_per_call", f"AI={flops/bytes_:.1f} flop/byte")
+    report.check("kernels/rwkv_scan/allclose",
+                 _rel_err(out_k, out_r) < 2e-3, "interpret vs oracle")
+
+    # ---------------------------------------------------- selective ssm
+    from repro.kernels.ssm_scan.ops import selective_scan
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+    B, T, di, N = 2, 256, 128, 16
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (B, T, di), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, di))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, T, N), jnp.float32)
+    Cm = jax.random.normal(ks[3], (B, T, N), jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.3)
+    Dv = jnp.ones((di,), jnp.float32)
+    s0 = jnp.zeros((B, di, N), jnp.float32)
+    flops = 6.0 * B * T * di * N
+    bytes_ = 4 * (2 * B * T * di + 2 * B * T * N + B * T * di)
+    ker = jax.jit(lambda *a: selective_scan(*a, bt=64)[0])
+    ref = jax.jit(lambda *a: ssm_scan_ref(*a)[0])
+    out_k, _ = _time(ker, u, dt, Bm, Cm, A, Dv, s0, repeats=1)
+    out_r, t_ref = _time(ref, u, dt, Bm, Cm, A, Dv, s0)
+    report.row("kernels/ssm_scan/rel_err", _rel_err(out_k, out_r), "",
+               f"B{B}T{T}di{di}N{N}")
+    report.row("kernels/ssm_scan/ref_us", round(t_ref * 1e6, 1),
+               "us_per_call", f"AI={flops/bytes_:.1f} flop/byte; XLA scan "
+               f"round-trips state (di x N) per step — VMEM-resident in "
+               f"the kernel")
+    report.check("kernels/ssm_scan/allclose",
+                 _rel_err(out_k, out_r) < 2e-3, "interpret vs oracle")

@@ -1,0 +1,64 @@
+"""Shared reporting for the benchmark suite.
+
+Every benchmark module exposes ``run(report)`` and emits:
+  * rows   — ``name,value,unit,derived`` CSV (machine-readable results)
+  * checks — pass/fail validations against the paper's claims
+  * tables — markdown tables (printed with --verbose, saved with --save)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass
+class Report:
+    verbose: bool = False
+    rows: list = field(default_factory=list)
+    checks: list = field(default_factory=list)
+    tables: list = field(default_factory=list)
+
+    def row(self, name: str, value, unit: str = "", derived: str = ""):
+        self.rows.append((name, value, unit, derived))
+        print(f"{name},{value},{unit},{derived}", flush=True)
+
+    def check(self, name: str, ok: bool, detail: str = ""):
+        self.checks.append((name, bool(ok), detail))
+        print(f"CHECK {'PASS' if ok else 'FAIL'} {name}: {detail}",
+              flush=True)
+
+    def table(self, title: str, markdown: str):
+        self.tables.append((title, markdown))
+        if self.verbose:
+            print(f"\n## {title}\n{markdown}\n", flush=True)
+
+    # ------------------------------------------------------------- timing
+    def timeit(self, name: str, fn, *, repeats: int = 5, warmup: int = 1,
+               derived: str = ""):
+        """Median-of-repeats wall time; records a row in µs per call."""
+        for _ in range(warmup):
+            fn()
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        med = sorted(times)[len(times) // 2]
+        self.row(name, round(med * 1e6, 1), "us_per_call", derived)
+        return med
+
+    # ------------------------------------------------------------- saving
+    def save(self, path: Path):
+        path.mkdir(parents=True, exist_ok=True)
+        csv = "\n".join(f"{n},{v},{u},{d}" for n, v, u, d in self.rows)
+        (path / "results.csv").write_text(csv + "\n")
+        md = "\n\n".join(f"## {t}\n{m}" for t, m in self.tables)
+        (path / "tables.md").write_text(md + "\n")
+        checks = "\n".join(f"{'PASS' if ok else 'FAIL'} {n}: {d}"
+                           for n, ok, d in self.checks)
+        (path / "checks.txt").write_text(checks + "\n")
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for _, ok, _ in self.checks if not ok)

@@ -1,0 +1,31 @@
+"""AHP substrate selection on YOUR measurements (deliverable b).
+
+    PYTHONPATH=src python examples/ahp_select.py
+
+Reproduces the paper's Tables 3/4/5 from its published Table 2 data, then
+re-runs the same methodology live against three in-process executor
+backends (the Falcon/FastApi/Flask analogue this container can host) and
+prints which backend the AHP selects per scenario.
+"""
+from __future__ import annotations
+
+from repro.core.ahp import (PAPER_RESULTS, reproduce_paper_tables)
+
+
+def main() -> None:
+    print("== Paper data -> Tables 3/4/5 ==")
+    for scenario, res in reproduce_paper_tables().items():
+        print(f"\n-- {scenario} (paper: "
+              f"{ {k: f'{v*100:.1f}%' for k, v in PAPER_RESULTS[scenario].items()} })")
+        print(res.table())
+        print(f"consistency ratios: "
+              f"{ {k: round(v, 4) for k, v in res.consistency.items()} }")
+
+    print("\n== Live re-run on executor backends ==")
+    from benchmarks import bench_framework
+    from benchmarks.report import Report
+    bench_framework.run(Report(verbose=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""NGINX-upstream semantics, in process (paper §3.3.1 / §4.3).
+
+Reproduces the paper's upstream block:
+
+    upstream parser-independent-PaaS {
+        server ip1:p1 max_fails=3 fail_timeout=15s;
+        server ip2:p2 max_fails=3 fail_timeout=15s;
+        server ip3:p3 backup;
+    }
+
+Round-robin over healthy primaries; a primary that fails ``max_fails``
+times inside a ``fail_timeout`` window is benched for ``fail_timeout``
+seconds; the ``backup`` replica only serves while ALL primaries are
+benched/down.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.services import Replica, ServiceError
+
+
+@dataclass
+class _ReplicaState:
+    fails: list = field(default_factory=list)   # failure timestamps
+    benched_until: float = 0.0
+
+
+class RoundRobinBalancer:
+    def __init__(self, replicas: list[Replica], *, max_fails: int = 3,
+                 fail_timeout: float = 15.0, clock=time.monotonic):
+        self.primaries = [r for r in replicas if not r.backup]
+        self.backups = [r for r in replicas if r.backup]
+        if not self.primaries:
+            raise ValueError("need at least one primary replica")
+        self.max_fails = max_fails
+        self.fail_timeout = fail_timeout
+        self.clock = clock
+        self._rr = 0
+        self._lock = threading.Lock()
+        self._state = {id(r): _ReplicaState() for r in replicas}
+        self.stats = {"served": 0, "failovers": 0, "backup_served": 0}
+
+    # ----------------------------------------------------------- selection
+    def _available(self, r: Replica) -> bool:
+        return self._state[id(r)].benched_until <= self.clock()
+
+    def _candidates(self) -> list[Replica]:
+        prim = [r for r in self.primaries if self._available(r)]
+        if prim:
+            return prim
+        return [r for r in self.backups if self._available(r)]
+
+    def _record_failure(self, r: Replica) -> None:
+        st = self._state[id(r)]
+        now = self.clock()
+        st.fails = [t for t in st.fails if now - t < self.fail_timeout]
+        st.fails.append(now)
+        if len(st.fails) >= self.max_fails:
+            st.benched_until = now + self.fail_timeout
+            st.fails = []
+
+    # ----------------------------------------------------------- dispatch
+    def __call__(self, payload, rng=None):
+        attempts = 0
+        last_err: Exception | None = None
+        # a request may retry a failing primary until it crosses max_fails
+        # and gets benched (then the backup pool takes over)
+        budget = self.max_fails * len(self.primaries) + len(self.backups) + 1
+        while attempts < budget:
+            with self._lock:
+                cands = self._candidates()
+                if not cands:
+                    break
+                r = cands[self._rr % len(cands)]
+                self._rr += 1
+            try:
+                out = r(payload, rng)
+                with self._lock:
+                    self.stats["served"] += 1
+                    if r.backup:
+                        self.stats["backup_served"] += 1
+                return out
+            except ServiceError as e:
+                last_err = e
+                attempts += 1
+                with self._lock:
+                    self._record_failure(r)
+                    self.stats["failovers"] += 1
+        raise ServiceError(
+            f"all replicas unavailable ({last_err})") from last_err
+
+
+def deploy(service, *, max_fails: int = 3, fail_timeout: float = 15.0,
+           clock=time.monotonic):
+    """Attach an upstream balancer to a Service (paper's single-uri
+    upstreaming)."""
+    service.balancer = RoundRobinBalancer(
+        service.replicas, max_fails=max_fails, fail_timeout=fail_timeout,
+        clock=clock)
+    return service

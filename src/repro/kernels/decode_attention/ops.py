@@ -1,0 +1,35 @@
+"""Public op for decode attention (+ the sharded LSE-combine helper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                merge_partials)
+
+
+def decode_attention(q, k, v, n_valid, *, sliding_window=0, bk=256,
+                     force_ref=False):
+    if force_ref:
+        return decode_attention_ref(q, k, v, n_valid,
+                                    sliding_window=sliding_window)
+    on_tpu = jax.default_backend() == "tpu"
+    return _kernel(q, k, v, n_valid, sliding_window=sliding_window, bk=bk,
+                   interpret=not on_tpu)
+
+
+def sharded_decode_attention(q, k_shards, v_shards, n_valid, **kw):
+    """Flash-decoding over a sequence-sharded KV cache: run the kernel per
+    shard (host loop stands in for the per-device program) and merge with
+    the closed-form LSE combine."""
+    outs, lses = [], []
+    offset = 0
+    for ks, vs in zip(k_shards, v_shards):
+        t = ks.shape[2]
+        local_valid = jnp.clip(n_valid - offset, 0, t)
+        o, l = decode_attention(q, ks, vs, local_valid, **kw)
+        outs.append(o)
+        lses.append(l)
+        offset += t
+    return merge_partials(outs, lses)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for single-token GQA decode attention (+ LSE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, n_valid, *, sliding_window: int = 0):
+    """q: (B, Hq, hd); k/v: (B, Hkv, T, hd); n_valid: scalar int.
+
+    Returns (out (B, Hq, hd) in q.dtype, lse (B, Hq) f32). LSE is the
+    log-sum-exp of the masked scores — the quantity needed to merge
+    partial attention across sequence shards (flash-decoding)."""
+    B, Hq, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) \
+        / jnp.sqrt(float(hd))
+    j = jnp.arange(T)
+    valid = j < n_valid
+    if sliding_window:
+        valid &= j >= n_valid - sliding_window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    lse = jax.nn.logsumexp(s, axis=-1)                       # (B,Hkv,G)
+    w = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))
+    return (o.reshape(B, Hq, hd).astype(q.dtype),
+            lse.reshape(B, Hq))
+
+
+def merge_partials(outs, lses):
+    """Merge per-shard (out, lse) partials: the LSE-combine used when the
+    KV cache is sequence-sharded. outs: list of (B,Hq,hd); lses: (B,Hq)."""
+    import numpy as np
+    lse = jnp.stack(lses)                                    # (S_, B, Hq)
+    m = jnp.max(lse, axis=0)
+    w = jnp.exp(lse - m[None])                               # (S_, B, Hq)
+    num = sum(w[i][..., None] * outs[i].astype(jnp.float32)
+              for i in range(len(outs)))
+    den = jnp.sum(w, axis=0)[..., None]
+    return (num / den).astype(outs[0].dtype)

@@ -1,0 +1,25 @@
+"""Public op: jitted wrapper choosing the Pallas kernel (TPU) or the
+interpret-mode kernel / jnp reference (CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, sliding_window=0,
+                    bq=128, bk=128, force_ref=False):
+    """Layout: q (B, Hq, S, hd), k/v (B, Hkv, T, hd)."""
+    if force_ref:
+        return flash_attention_ref(q, k, v, causal=causal,
+                                   sliding_window=sliding_window)
+    on_tpu = jax.default_backend() == "tpu"
+    return _kernel(q, k, v, causal=causal, sliding_window=sliding_window,
+                   bq=bq, bk=bk, interpret=not on_tpu)
+
+
+def attention_bshd(q, k, v, **kw):
+    """Convenience for (B, S, H, hd) layouts used by the model zoo."""
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    return t(flash_attention(t(q), t(k), t(v), **kw))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal or
+sliding-window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0) -> jnp.ndarray:
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, T, hd) -> (B, Hq, S, hd).
+    Softmax in f32; output in q.dtype."""
+    B, Hq, S, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, hd)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    i = jnp.arange(S)[:, None] + (T - S)
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= j <= i
+    if sliding_window:
+        mask &= j > i - sliding_window
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, S, hd).astype(q.dtype)

@@ -1,0 +1,14 @@
+"""Public op for the WKV6 scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv_scan.kernel import wkv_scan as _kernel
+from repro.kernels.rwkv_scan.ref import wkv_ref
+
+
+def wkv(r, k, v, w, u, state, *, bt=64, force_ref=False):
+    if force_ref:
+        return wkv_ref(r, k, v, w, u, state)
+    on_tpu = jax.default_backend() == "tpu"
+    return _kernel(r, k, v, w, u, state, bt=bt, interpret=not on_tpu)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV6 recurrence (repro.models.rwkv6.wkv_scan
+restated standalone so the kernel test has no model dependency)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """r/k/v/w: (B, T, H, hd) f32 (w = per-step decay in (0,1));
+    u: (H, hd); state: (B, H, hd, hd).
+    Returns (out (B,T,H,hd) f32, final_state)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state

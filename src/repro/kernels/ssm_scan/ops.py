@@ -1,0 +1,18 @@
+"""Public op: jitted wrapper choosing the Pallas kernel (TPU; interpret
+on CPU) or the jnp reference."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan as _kernel
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def selective_scan(u, dt, Bm, Cm, A, D, state, *, bt: int = 64,
+                   force_ref: bool = False):
+    """u/dt: (B,T,di); Bm/Cm: (B,T,N); A: (di,N); D: (di,);
+    state: (B,di,N). Returns (y, final_state), both f32."""
+    if force_ref:
+        return ssm_scan_ref(u, dt, Bm, Cm, A, D, state)
+    on_tpu = jax.default_backend() == "tpu"
+    return _kernel(u, dt, Bm, Cm, A, D, state, bt=bt, interpret=not on_tpu)

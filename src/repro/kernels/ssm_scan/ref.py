@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the selective SSM scan (repro.models.ssm
+restated standalone so the kernel test has no model dependency)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, Bm, Cm, A, D, state):
+    """u/dt: (B,T,di) f32; Bm/Cm: (B,T,N) f32; A: (di,N); D: (di,);
+    state: (B,di,N) f32. Returns (y (B,T,di) f32, final_state)."""
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)
+        h = dA * h + (dt_t * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * u_t
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, Bm, Cm))
+    state, y = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(y, 0, 1), state

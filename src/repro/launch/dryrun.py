@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count on first init), which is why the docstring sits below them
+# and `from __future__` is not used in this module.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Results cache to experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline benchmark reads them. This module (and ONLY this module) forces
+512 host platform devices — smoke tests and benches see 1 device.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.sharding.rules import ParallelPlan
+from repro.train import optimizer as opt
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+LONG_CONTEXT_WINDOW = 4096  # sliding window for full-attention archs @500k
+
+
+def config_for(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape_name == "long_500k" and cfg.uses_attention and \
+            not cfg.sliding_window:
+        # full attention is quadratic-infeasible at 524k: use the
+        # sliding-window serving variant (DESIGN.md §5)
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg, shape
+
+
+def build_lowering(arch: str, shape_name: str, mesh, sharding_overrides=None):
+    """Returns (lowered, meta) for the (arch, shape) pair on mesh."""
+    cfg, shape = config_for(arch, shape_name)
+    model = build_model(cfg)
+    plan = ParallelPlan.make(mesh, cfg, shape.kind)
+    if sharding_overrides:
+        plan = sharding_overrides(plan)
+
+    params_s = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = plan.param_shardings(params_s)
+    specs = model.input_specs(shape)
+    in_sh = plan.input_shardings(specs)
+
+    if shape.kind == "train":
+        oc = opt.AdamWConfig()
+        opt_s = jax.eval_shape(opt.init_state, params_s)
+        o_sh = plan.param_shardings(opt_s)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                loss, metrics = model.train_loss(p, batch, plan)
+                return loss, metrics
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_p, new_s, om = opt.apply_updates(params, grads, opt_state, oc)
+            metrics.update(om)
+            return new_p, new_s, metrics
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, in_sh["batch"]),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (params_s, opt_s, specs["batch"])
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, plan)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, in_sh["batch"]))
+        args = (params_s, specs["batch"])
+    else:  # decode: one token against a seq_len cache
+        def serve_step(params, token, cache, cache_len):
+            return model.decode_step(params, token, cache, cache_len, plan)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, in_sh["token"], in_sh["cache"],
+                          plan.ns(jax.sharding.PartitionSpec())),
+            out_shardings=(None, in_sh["cache"]),
+            donate_argnums=(2,))
+        specs_cl = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params_s, specs["token"], specs["cache"], specs_cl)
+
+    n_devices = mesh.size
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "n_devices": n_devices,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "moe_mode": plan.moe_mode,
+    }
+    return fn.lower(*args), meta
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, force=False) -> dict:
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        lowered, meta = build_lowering(arch, shape_name, mesh)
+        rec.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + max(mem.output_size_in_bytes - mem.alias_size_in_bytes, 0))
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": peak,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+        txt = compiled.as_text()
+        # CPU backend carries f32 twins of large bf16 loop state (no
+        # native bf16 dot on CPU) and converts between them every
+        # iteration; a TPU backend does neither. Deduct both the twin's
+        # residency and its maintenance traffic (documented estimate).
+        artifact, art_dims = hlo_analysis.dual_dtype_loop_state(txt)
+        rec["memory"]["dual_dtype_artifact_bytes"] = artifact
+        rec["memory"]["peak_bytes_tpu_estimate"] = peak - artifact
+        stats = hlo_analysis.analyze(txt, exclude_dims=art_dims)
+        rec["hlo"] = {
+            "flops_per_device": stats.flops,
+            "hbm_bytes_per_device": stats.hbm_bytes,
+            "collective_bytes": dict(stats.collective_bytes),
+            "collective_bytes_tpu": dict(stats.collective_bytes_tpu),
+            "collective_counts": dict(stats.collective_counts),
+            "loops": stats.loops[:32],
+            "hlo_chars": len(txt),
+        }
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    out_path.write_text(json.dumps(rec, indent=1))
+    jax.clear_caches()  # keep the long --all sweep's RSS bounded
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    n_ok = n_err = 0
+    for mk in meshes:
+        for arch in archs:
+            for shp in shapes:
+                rec = run_pair(arch, shp, mk, force=args.force)
+                ok = rec["status"] == "ok"
+                n_ok += ok
+                n_err += (not ok)
+                msg = (f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                       f"flops={rec['hlo']['flops_per_device']:.3g} "
+                       f"coll={sum(rec['hlo']['collective_bytes'].values()):.3g}B"
+                       if ok else rec.get("error", "?"))
+                print(f"[{rec['status']:5s}] {arch:18s} {shp:12s} {mk:6s} "
+                      f"({rec['total_s']:6.1f}s) {msg}", flush=True)
+    print(f"done: {n_ok} ok, {n_err} failed")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

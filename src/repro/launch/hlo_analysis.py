@@ -1,0 +1,480 @@
+"""Multiplicity-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` visits every while body ONCE (verified on this
+jax build: a 10-step scan of 128^3 matmuls reports 1x matmul flops), so for
+scanned-layer models it undercounts by ~n_layers. This parser walks the HLO
+text, recovers loop trip counts from the loop-condition's comparison
+constant, and accumulates per-device:
+
+  * flops            — dot/convolution flops x enclosing trip counts
+  * hbm_bytes        — operand+result bytes of top-level (fusion-boundary)
+                       ops x trip counts (fusion bodies are not re-counted)
+  * collective_bytes — per collective kind (all-reduce, all-gather,
+                       reduce-scatter, all-to-all, collective-permute),
+                       max(result, operands) bytes x trip counts
+
+Shapes in the partitioned module are per-device, so every number here is
+per-device already.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list
+    attrs: str
+    inner: str = ""   # raw text inside the op's parens (constants etc.)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symtab: dict = field(default_factory=dict)   # op name -> result type
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, rtype, kind = om.groups()
+        # operand names: inside the call parens, before attribute list
+        paren = line[line.index(kind + "(") + len(kind) + 1:]
+        depth, i = 1, 0
+        while i < len(paren) and depth:
+            if paren[i] == "(":
+                depth += 1
+            elif paren[i] == ")":
+                depth -= 1
+            i += 1
+        inner, attrs = paren[: i - 1], paren[i:]
+        operands = _OPERAND_RE.findall(inner)
+        cur.ops.append(Op(name, kind, rtype, operands, attrs, inner))
+        cur.symtab[name] = rtype
+    return comps
+
+
+def _trip_count(while_op: Op, comps: dict) -> int:
+    """Trip count from the while op's backend_config (XLA records
+    known_trip_count), falling back to the largest integer constant in the
+    loop condition computation."""
+    m = re.search(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"', while_op.attrs)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w.\-]+)", while_op.attrs)
+    best = 1
+    if cm and cm.group(1) in comps:
+        for op in comps[cm.group(1)].ops:
+            if op.kind == "constant":
+                f = re.fullmatch(r"\d+", op.inner.strip())
+                if f:
+                    best = max(best, int(f.group(0)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out = 1
+    for dt, dims in _SHAPE_RE.findall(op.result_type):
+        if dt in DTYPE_BYTES:
+            for d in dims.split(","):
+                if d:
+                    out *= int(d)
+            break
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs_type = comp.symtab.get(op.operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * out * contract
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = field(default_factory=lambda: defaultdict(int))
+    # TPU-corrected collective traffic (see ``analyze`` docstring):
+    # f32 collectives counted at bf16 width, AR+slice counted as RS.
+    collective_bytes_tpu: dict = field(
+        default_factory=lambda: defaultdict(float))
+    loops: list = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def total_collective_bytes_tpu(self) -> float:
+        return sum(self.collective_bytes_tpu.values())
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "fusion",
+               "custom-call", "after-all", "partition-id", "replica-id"}
+
+# Ops that touch only a REGION of their big operand: counting the full
+# operand would overstate HBM traffic by the trip count when they sit in
+# a scan (rwkv/ssm time loops, KV-cache updates). Traffic model:
+#   dynamic-slice / gather      -> read  = result bytes
+#   dynamic-update-slice        -> read+write = 2 x update-operand bytes
+#                                  (the buffer itself aliases in place)
+_SLICING_READS = {"dynamic-slice", "gather"}
+
+
+def _op_hbm_bytes(op: Op, comp: Computation) -> float:
+    """Approximate HBM traffic of one op (read + write)."""
+    rb = shape_bytes(op.result_type)
+    if op.kind in _SLICING_READS:
+        idx = sum(shape_bytes(comp.symtab.get(o, ""))
+                  for o in op.operands[1:])          # indices are tiny
+        return 2.0 * rb + idx
+    if op.kind == "dynamic-update-slice":
+        ub = shape_bytes(comp.symtab.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else rb
+        return 2.0 * ub
+    ob = sum(shape_bytes(comp.symtab.get(o, "")) for o in op.operands)
+    return rb + ob
+
+
+def _param_indices(comp: Computation) -> dict:
+    """parameter name -> index for a fusion body computation."""
+    out = {}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            m = re.fullmatch(r"(\d+)", op.inner.strip())
+            if m:
+                out[op.name] = int(m.group(1))
+    return out
+
+
+def _fusion_hbm_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """HBM traffic of a fusion at its boundary, crediting operands that
+    are consumed only through slicing ops (region reads, not full reads)
+    and in-place dynamic-update-slice roots (region writes)."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    body = comps.get(m.group(1)) if m else None
+    rb = shape_bytes(op.result_type)
+    if body is None:
+        return rb + sum(shape_bytes(comp.symtab.get(o, ""))
+                        for o in op.operands)
+    params = _param_indices(body)
+    consumers: dict = {p: [] for p in params}
+    for bop in body.ops:
+        for o in bop.operands:
+            if o in consumers:
+                consumers[o].append(bop)
+    total = 0.0
+    for pname, idx in params.items():
+        full = shape_bytes(body.symtab.get(pname, ""))
+        cons = consumers[pname]
+        if cons and all(c.kind in _SLICING_READS and c.operands
+                        and c.operands[0] == pname for c in cons):
+            total += min(full, sum(shape_bytes(c.result_type)
+                                   for c in cons))
+        elif cons and all(c.kind == "dynamic-update-slice" and c.operands
+                          and c.operands[0] == pname for c in cons):
+            total += min(full, sum(
+                shape_bytes(body.symtab.get(c.operands[1], ""))
+                for c in cons))
+        else:
+            total += full
+    # in-place update root: the write is the update region, and the
+    # buffer output aliases the input
+    root = body.ops[-1] if body.ops else None
+    if root is not None and root.kind == "dynamic-update-slice" \
+            and len(root.operands) > 1:
+        rb = min(rb, shape_bytes(body.symtab.get(root.operands[1], "")))
+    return total + rb
+
+
+def dual_dtype_loop_state(hlo: str, min_bytes: int = 2**26):
+    """CPU-backend artifact detector: the CPU emitter has no native bf16
+    dot, so XLA keeps an f32 twin of large bf16 loop-state buffers (e.g.
+    a decode KV cache) in while-state, converting between the pair every
+    iteration. A TPU backend consumes bf16 in the MXU directly and
+    carries no twin. Returns (artifact_bytes, artifact_dims): the bytes
+    of f32 while-state entries that shape-match a bf16 entry in the same
+    state tuple (how much the CPU peak overstates the TPU peak), and the
+    dim-strings of those twins (ops producing these shapes are twin
+    maintenance — excludable from HBM-traffic accounting)."""
+    artifact = 0
+    dims_set: set[str] = set()
+    for line in hlo.splitlines():
+        m = re.search(r"=\s*(\(.*?\))\s*while\(", line)
+        if not m:
+            continue
+        entries = _SHAPE_RE.findall(m.group(1))
+        bf16_dims = {dims for dt, dims in entries if dt == "bf16"}
+        for dt, dims in entries:
+            if dt == "f32" and dims in bf16_dims:
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                if n * 4 >= min_bytes:
+                    artifact += n * 4
+                    dims_set.add(dims)
+    # Weight/cache promotions: a `convert` producing a large f32 copy of
+    # a same-shaped bf16 RESIDENT buffer — an entry parameter (weights,
+    # KV cache) or a while-state entry. A TPU consumes bf16 directly and
+    # materializes no twin. Each unique shape counted ONCE (residency
+    # estimate, not traffic). Restricting to resident shapes avoids
+    # deducting transient activation converts that never coexist.
+    comps = parse_computations(hlo)
+    resident: set[str] = set()
+    entry = next((c for n, c in comps.items() if n.startswith("main")),
+                 None)
+    if entry is not None:
+        for op in entry.ops:
+            if op.kind == "parameter" and "bf16" in op.result_type:
+                for dt, dims in _SHAPE_RE.findall(op.result_type):
+                    if dt == "bf16":
+                        resident.add(dims)
+    for line in hlo.splitlines():
+        m = re.search(r"=\s*(\(.*?\))\s*while\(", line)
+        if m:
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                if dt == "bf16":
+                    resident.add(dims)
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind != "convert" or not op.result_type.startswith("f32"):
+                continue
+            dims = _result_dims(op.result_type)
+            if not dims or dims in dims_set or dims not in resident:
+                continue
+            operand_t = comp.symtab.get(op.operands[0], "") \
+                if op.operands else ""
+            if not operand_t.startswith("bf16") \
+                    or _result_dims(operand_t) != dims:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            if n * 4 >= min_bytes:
+                artifact += n * 4
+                dims_set.add(dims)
+    return artifact, dims_set
+
+
+def dual_dtype_loop_state_bytes(hlo: str, min_bytes: int = 2**26) -> int:
+    return dual_dtype_loop_state(hlo, min_bytes)[0]
+
+
+def _result_dims(type_str: str) -> str:
+    m = _SHAPE_RE.search(type_str)
+    return m.group(2) if m else ""
+
+
+_PASSTHROUGH = {"get-tuple-element", "tuple", "bitcast", "copy", "convert",
+                "all-reduce-done", "optimization-barrier", "transpose",
+                "reshape"}
+
+
+def _all_consumers_slice(op: Op, comp: Computation) -> bool:
+    """True if every (transitive, through pass-through ops) consumer of
+    this op is a dynamic-slice — the all-reduce + shard-slice pattern
+    that the TPU pipeline rewrites into a reduce-scatter."""
+    if not hasattr(comp, "_consumers"):
+        cons: dict = {}
+        for o in comp.ops:
+            for operand in o.operands:
+                cons.setdefault(operand, []).append(o)
+        comp._consumers = cons
+    seen = set()
+
+    def check(name: str) -> bool:
+        if name in seen:
+            return True
+        seen.add(name)
+        users = comp._consumers.get(name, [])
+        if not users:
+            return False                  # escapes the computation: unknown
+        for u in users:
+            if u.kind in ("dynamic-slice", "slice"):
+                continue
+            if u.kind in _PASSTHROUGH:
+                if not check(u.name):
+                    return False
+                continue
+            return False
+        return True
+
+    return check(op.name)
+
+
+def _f32_fraction_as_bf16(type_str: str) -> float:
+    """Bytes of the type with every f32 array counted at bf16 width,
+    divided by its raw bytes (the CPU->TPU dtype-width correction)."""
+    raw = corr = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        raw += n * DTYPE_BYTES[dt]
+        corr += n * (2 if dt == "f32" else DTYPE_BYTES[dt])
+    return corr / raw if raw else 1.0
+
+
+def analyze(hlo: str, exclude_dims: set | None = None,
+            bf16_target: bool = True) -> HloStats:
+    """exclude_dims: result-dim strings whose producing ops are CPU
+    dual-dtype twin maintenance (see ``dual_dtype_loop_state``) — their
+    HBM traffic is excluded, since a TPU lowering would not perform it.
+
+    ``collective_bytes_tpu`` additionally corrects two CPU-backend
+    lowering artifacts (the raw numbers stay in ``collective_bytes``):
+      * the CPU emitter promotes bf16 params/grads/activations to f32, so
+        their collectives move 2x the bytes a bf16 TPU program would
+        (disable with bf16_target=False for genuinely-f32 models);
+      * XLA-CPU lacks the ReduceScatterCreator pass, so sharded-gradient
+        reductions appear as all-reduce + dynamic-slice; a TPU lowering
+        emits reduce-scatter (~half the ring traffic). Detected as an
+        all-reduce whose every consumer is a (gte->)dynamic-slice.
+    """
+    exclude_dims = exclude_dims or set()
+    comps = parse_computations(hlo)
+    stats = HloStats()
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: computation named main*
+        entry = next((n for n in comps if n.startswith("main")), None)
+    fused = set()
+    for c in comps.values():
+        for op in c.ops:
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if op.kind == "fusion" and m:
+                fused.add(m.group(1))
+
+    def visit(comp_name: str, mult: float, count_bytes: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                stats.flops += mult * _dot_flops(op, comp)
+            if op.kind == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = _trip_count(op, comps)
+                stats.loops.append((op.name, trips))
+                if body:
+                    visit(body.group(1), mult * trips, count_bytes)
+                continue
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    visit(m.group(1), mult, False)   # flops only inside
+            if op.kind in ("call", "conditional"):
+                for m in re.finditer(r"(?:to_apply|branch_computations=\{?|"
+                                     r"true_computation=|false_computation=)"
+                                     r"%?([\w.\-]+)", op.attrs):
+                    visit(m.group(1), mult, count_bytes)
+            base = op.kind.split(".")[0]
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base in COLLECTIVES:
+                rb = shape_bytes(op.result_type)
+                ob = sum(shape_bytes(comp.symtab.get(o, ""))
+                         for o in op.operands)
+                # physical ICI traffic: ring all-reduce moves ~2x the
+                # buffer (reduce-scatter + all-gather phases); AG/RS/A2A
+                # move ~1x the full buffer; permute moves the buffer once
+                factor = 2.0 if base == "all-reduce" else 1.0
+                bytes_ = mult * max(rb, ob)
+                stats.collective_bytes[base] += factor * bytes_
+                stats.collective_counts[base] += 1
+                tpu_factor = factor
+                if base == "all-reduce" and _all_consumers_slice(op, comp):
+                    tpu_factor = 1.0          # TPU lowers this as RS
+                scale = _f32_fraction_as_bf16(op.result_type) \
+                    if bf16_target else 1.0
+                stats.collective_bytes_tpu[base] += \
+                    tpu_factor * scale * bytes_
+            if count_bytes and op.kind not in _SKIP_BYTES \
+                    and _result_dims(op.result_type) not in exclude_dims:
+                stats.hbm_bytes += mult * _op_hbm_bytes(op, comp)
+        return
+
+    def visit_fusion_boundary(comp_name: str, mult: float):
+        """Count fusion ops' own operand/result bytes at the call site."""
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "fusion":
+                if _result_dims(op.result_type) in exclude_dims:
+                    continue
+                stats.hbm_bytes += mult * _fusion_hbm_bytes(op, comp, comps)
+            elif op.kind == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = _trip_count(op, comps)
+                if body:
+                    visit_fusion_boundary(body.group(1), mult * trips)
+
+    if entry:
+        visit(entry, 1.0, True)
+        visit_fusion_boundary(entry, 1.0)
+    return stats

@@ -1,0 +1,149 @@
+"""Roofline terms from dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/<arch>__<shape>__<mesh>.json (written by
+``repro.launch.dryrun``) and derives, per (arch, shape, mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(The dry-run's ``hlo_analysis`` reports per-device numbers from the SPMD
+partitioned module, so no further division by chip count is needed.)
+
+MODEL_FLOPS follows the assignment: 6*N*D for training (fwd+bwd),
+2*N*D for inference steps, with N = active params (MoE: top-k only) and
+D = tokens processed by the step. The ratio MODEL_FLOPS / total_HLO_FLOPs
+exposes remat recompute and redundant work.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (constants from the assignment).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_devices: int
+    n_params: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    collective_bytes: dict
+    peak_gib: float          # TPU estimate (CPU dual-dtype twin deducted)
+    peak_raw_gib: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs — <1 means remat/redundancy."""
+        return self.model_flops / max(self.hlo_flops_total, 1.0)
+
+    @property
+    def static_gib(self) -> float:
+        """Unavoidable per-device bytes: weights (+ optimizer state when
+        training), perfectly sharded. If this alone exceeds HBM, the
+        (arch, shape, mesh) is capacity-infeasible — no sharding fix."""
+        n = {"train": 10.0}.get(self.kind, 2.0)    # bf16 w + f32 mu,nu
+        return self.n_params * n / self.n_devices / 2**30
+
+    def feasible(self, hbm_gib: float = 16.0) -> bool:
+        return self.static_gib <= hbm_gib
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """If the step ran exactly at its roofline bound, what MFU would
+        the *useful* model flops achieve? (compute-bound & no waste = 1)"""
+        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        return ideal / max(self.bound_s, 1e-30)
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["n_active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence against the cache
+    return 2.0 * n_active * rec["global_batch"]
+
+
+def from_record(rec: dict) -> Roofline:
+    hlo = rec["hlo"]
+    # TPU-corrected collective traffic when the dry-run recorded it
+    # (bf16 width + RS-pattern rewrite; hlo_analysis docstring)
+    coll = sum(hlo.get("collective_bytes_tpu",
+                       hlo["collective_bytes"]).values())
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"], n_devices=rec["n_devices"],
+        n_params=rec["n_params"],
+        compute_s=hlo["flops_per_device"] / PEAK_FLOPS,
+        memory_s=hlo["hbm_bytes_per_device"] / HBM_BW,
+        collective_s=coll / ICI_BW,
+        model_flops=model_flops(rec),
+        hlo_flops_total=hlo["flops_per_device"] * rec["n_devices"],
+        collective_bytes=hlo["collective_bytes"],
+        peak_gib=rec["memory"].get(
+            "peak_bytes_tpu_estimate",
+            rec["memory"]["peak_bytes_per_device"]) / 2**30,
+        peak_raw_gib=rec["memory"]["peak_bytes_per_device"] / 2**30,
+    )
+
+
+def load(arch: str, shape: str, mesh: str = "single",
+         results_dir: Path | None = None) -> Roofline:
+    p = (results_dir or RESULTS_DIR) / f"{arch}__{shape}__{mesh}.json"
+    rec = json.loads(p.read_text())
+    if rec.get("status") != "ok":
+        raise ValueError(f"{p.name}: dry-run failed: {rec.get('error')}")
+    return from_record(rec)
+
+
+def load_all(mesh: str = "single", results_dir: Path | None = None):
+    out = []
+    rd = results_dir or RESULTS_DIR
+    for p in sorted(rd.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "ok":
+            out.append(from_record(rec))
+    return out
+
+
+def markdown_table(rows: list) -> str:
+    head = ("arch | shape | kind | compute (s) | memory (s) | collective (s)"
+            " | dominant | peak GiB/dev | useful-FLOPs ratio | MFU bound")
+    lines = [head, " | ".join(["---"] * 10)]
+    for r in rows:
+        lines.append(
+            f"{r.arch} | {r.shape} | {r.kind} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+            f"{r.peak_gib:.2f} | {r.useful_flops_ratio:.2f} | "
+            f"{r.mfu_upper_bound:.2f}")
+    return "\n".join(lines)

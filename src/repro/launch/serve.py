@@ -1,0 +1,66 @@
+"""Serving launcher: batched prefill/decode engine for one architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+        [--requests 6] [--batch 4] [--max-new 8]
+
+Serves synthetic token requests through the continuous-batching engine
+(reduced config on CPU). For the multi-model parallel-PaaS serving of the
+paper, see examples/serve_parallel_pipeline.py; for pod-scale serving
+shapes, see repro.launch.dryrun (decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              dtype=jax.numpy.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, batch_size=args.batch,
+                        max_seq=args.max_seq)
+
+    rng = jax.random.key(1)
+    reqs = []
+    for i in range(args.requests):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (args.prompt_len,), 2,
+                                    cfg.vocab_size).tolist()
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=args.max_new))
+
+    print(f"serving {args.requests} requests on {args.arch} "
+          f"({cfg.family}, reduced) — engine batch {args.batch}")
+    done = eng.run(reqs)
+    lats = [r.latency_s for r in done]
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"completed {len(done)}; {toks} tokens; "
+          f"latency p50={statistics.median(lats)*1e3:.0f}ms "
+          f"max={max(lats)*1e3:.0f}ms")
+    print(f"engine metrics: {eng.metrics}")
+    for r in done[:3]:
+        print(f"  req {r.rid}: out={r.out_tokens}")
+    assert len(done) == args.requests
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

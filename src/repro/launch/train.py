@@ -1,0 +1,85 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        [--steps 50] [--reduced/--full] [--mesh-shape 2,2] [--seq 128]
+
+On this CPU container ``--reduced`` (default) trains the family-preserving
+small variant on however many devices exist; ``--full`` requires a real
+pod (it will build the production mesh and the full-size config — on CPU
+that only makes sense under the dry-run, which is ``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import build_model
+from repro.sharding.rules import ParallelPlan
+from repro.train import optimizer as opt_mod
+from repro.train.data import DataConfig, PackedLMDataset
+from repro.train.train_loop import TrainerConfig, train
+
+
+def make_mesh(shape_str: str | None):
+    if not shape_str:
+        n = len(jax.devices())
+        if n == 1:
+            return None
+        return jax.make_mesh((1, n), ("data", "model"))
+    dims = tuple(int(x) for x in shape_str.split(","))
+    names = ("data", "model")[-len(dims):] if len(dims) <= 2 else \
+        ("pod", "data", "model")
+    return jax.make_mesh(dims, names)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (pod hardware)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 4,2 -> (data=4, model=2)")
+    ap.add_argument("--ckpt-root", default="checkpoints")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = dataclasses.replace(cfg.reduced(), dtype=jax.numpy.float32,
+                                  vocab_size=4096)
+    mesh = make_mesh(args.mesh_shape)
+    plan = ParallelPlan.make(mesh, cfg, "train")
+    model = build_model(cfg)
+
+    n_dev = mesh.size if mesh else 1
+    print(f"training {args.arch} ({cfg.family}) on {n_dev} device(s); "
+          f"mesh={dict(mesh.shape) if mesh else None}")
+
+    data = PackedLMDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      batch_size=args.batch,
+                                      n_documents=2048))
+    tc = TrainerConfig(
+        n_steps=args.steps, log_every=max(args.steps // 10, 1),
+        ckpt_root=args.ckpt_root, ckpt_name=args.arch,
+        opt=opt_mod.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                total_steps=args.steps))
+    res = train(model, data, tc, plan=plan)
+    for h in res.history:
+        print(f"  step {h['step']:4d} loss {h['loss']:.4f}")
+    losses = [h["loss"] for h in res.history]
+    print(f"{res.steps_per_s:.2f} steps/s; loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}; checkpoint: {args.ckpt_root}/{args.arch}-final")
+    if not np.isfinite(losses[-1]):
+        raise SystemExit("non-finite loss")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""GQA attention: full/sliding-window causal for train+prefill, and
+single-token decode against a (possibly sequence-sharded) KV cache.
+
+These are the pure-jnp paths used for CPU smoke tests and for the dry-run
+lowering (the SPMD partitioner turns the softmax/contraction over a
+sequence-sharded KV cache into the flash-decoding LSE-combine collectives).
+On TPU the hot paths swap in the Pallas kernels from ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_attention(rng, cfg, dtype=None):
+    d, hd = cfg.d_model, cfg.hd
+    dtype = dtype or cfg.dtype
+    ks = jax.random.split(rng, 4)
+    p = {
+        "w_q": layers.dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "w_kv": layers.dense_init(ks[1], d, 2 * cfg.n_kv_heads * hd, dtype),
+        "w_o": layers.dense_init(ks[2], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv(x, p, cfg, positions=None, mrope_positions=None):
+    """Project to q (B,S,Hq,hd), k/v (B,S,Hkv,hd) with rope + qk_norm."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["w_q"]).reshape(B, S, cfg.n_heads, hd)
+    kv = (x @ p["w_kv"]).reshape(B, S, 2, cfg.n_kv_heads, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope == "rope":
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        assert mrope_positions is not None
+        q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(kv, G: int):
+    """(B,T,Hkv,hd) -> (B,T,Hq,hd) by repeating each kv head G times.
+
+    The repeat-KV formulation (vs grouping q into (Hkv,G,hd)) keeps the
+    q-head axis intact, so head-sharded attention never reshapes a
+    sharded dim — the (Hq)->(Hkv,G) reshape forced an all-to-all rehard
+    of q/scores per layer under TP (§Perf, minitron-8b x train_4k). The
+    repeat is a broadcast: per device it materializes only local heads.
+    """
+    if G == 1:
+        return kv
+    B, T, Hkv, hd = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (B, T, Hkv, G, hd)) \
+        .reshape(B, T, Hkv * G, hd)
+
+
+def _gqa_scores(q, k):
+    """q (B,S,Hq,hd), k (B,T,Hkv,hd) -> scores (B,Hq,S,T) in f32."""
+    B, S, Hq, hd = q.shape
+    kx = _expand_kv(k, Hq // k.shape[2])
+    s = jnp.einsum("bshd,bthd->bhst", q, kx,
+                   preferred_element_type=jnp.float32)
+    return s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+
+def _combine(scores, v, Hq: int):
+    """scores (B,Hq,S,T) f32, v (B,T,Hkv,hd) -> out (B,S,Hq*hd)."""
+    B, _, S, T = scores.shape
+    vx = _expand_kv(v, Hq // v.shape[2])
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), vx)
+    return o.reshape(B, S, Hq * v.shape[-1])
+
+
+Q_CHUNK = 1024  # query-block size for the chunked jnp path
+
+
+def _masked_attention(q, k, v, q_offset, *, sliding_window=0, causal=True):
+    """q (B,S,Hq,hd) at absolute positions q_offset + [0,S)."""
+    S, T = q.shape[1], k.shape[1]
+    scores = _gqa_scores(q, k)
+    i = jnp.arange(S)[:, None] + q_offset     # absolute q positions
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= j <= i
+    if sliding_window:
+        mask &= j > i - sliding_window
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    return _combine(scores, v, q.shape[2])
+
+
+def causal_attention(q, k, v, *, sliding_window: int = 0, causal: bool = True):
+    """Full or sliding-window (causal) attention; q/k/v aligned in time.
+
+    Long sequences are processed in query chunks (``lax.scan``) so the
+    score tensor never materializes at (S, T) — the XLA-level analogue of
+    the Pallas flash kernel's q-block grid.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    if S <= Q_CHUNK or S % Q_CHUNK:
+        return _masked_attention(q, k, v, T - S, sliding_window=sliding_window,
+                                 causal=causal)
+    nc = S // Q_CHUNK
+    qc = jnp.moveaxis(q.reshape(B, nc, Q_CHUNK, Hq, hd), 1, 0)
+
+    def body(_, inp):
+        i, qi = inp
+        o = _masked_attention(qi, k, v, T - S + i * Q_CHUNK,
+                              sliding_window=sliding_window, causal=causal)
+        return None, o
+
+    # flash-attention memory behaviour: recompute each chunk's scores in
+    # the backward pass instead of stacking (nc, B, H, Q_CHUNK, T) f32
+    # score tensors for it (whisper train: 30 GiB of saved scores, §Perf)
+    _, out = jax.lax.scan(jax.checkpoint(body), None, (jnp.arange(nc), qc))
+    # out: (nc, B, Q_CHUNK, Hq*hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, Hq * hd)
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, sliding_window: int = 0):
+    """One new token per sequence attending to the cache.
+
+    q: (B, 1, Hq, hd); k/v_cache: (B, T, Hkv, hd); n_valid: scalar or (B,)
+    count of valid cache entries (the new token's K/V already written).
+
+    With the cache sequence axis sharded, the softmax reductions and the
+    PV contraction lower to partial-max/partial-sum + all-reduce — i.e.
+    flash-decoding style LSE combination, inserted by the partitioner.
+    """
+    scores = _gqa_scores(q, k_cache)                       # (B,Hq,1,T)
+    T = k_cache.shape[1]
+    j = jnp.arange(T)
+    n_valid = jnp.asarray(n_valid)
+    valid = j[None, :] < n_valid.reshape(-1, 1)            # (B or 1, T)
+    if sliding_window:
+        valid &= j[None, :] >= n_valid.reshape(-1, 1) - sliding_window
+    scores = jnp.where(valid[:, None, None, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    return _combine(scores, v_cache, q.shape[2])
+
+
+def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
+                    positions=None, mrope_positions=None, causal=True,
+                    sliding_window=None, plan=None):
+    """Full attention sub-block incl. output proj. Returns (out, new_cache).
+
+    cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None.
+    """
+    win = cfg.sliding_window if sliding_window is None else sliding_window
+    if mode == "decode":
+        # cache_len = number of tokens already cached; the new token goes
+        # at index cache_len and attends to indices [0, cache_len].
+        pos = cache_len if positions is None else positions
+        q, k, v = qkv(x, p, cfg, positions=jnp.reshape(pos, (1, 1)),
+                      mrope_positions=mrope_positions)
+        if plan is not None and plan.mesh is not None:
+            # Flash-decoding layout (§Perf): the single-token q is tiny —
+            # replicate its heads so the seq-sharded cache never reshards;
+            # each model-group computes partial attention over its KV
+            # slice and the softmax/PV reductions close with small psums.
+            from jax.sharding import PartitionSpec as P
+            b = plan._div(q.shape[0], plan.batch_axes)
+            rep = lambda t: jax.lax.with_sharding_constraint(
+                t, plan.ns(P(b, None, None, None)))
+            q, k, v = rep(q), rep(k), rep(v)
+        idx = jnp.asarray(cache_len, jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        o = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                             sliding_window=win)
+        if plan is not None and plan.mesh is not None:
+            # pin the joined attention output replicated as well — the
+            # row-sharded w_o otherwise drags head-sharding back through
+            # the combine and the partitioner re-shards the cache
+            from jax.sharding import PartitionSpec as P
+            o = jax.lax.with_sharding_constraint(
+                o, plan.ns(P(plan._div(o.shape[0], plan.batch_axes),
+                             None, None)))
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        q, k, v = qkv(x, p, cfg, positions=positions,
+                      mrope_positions=mrope_positions)
+        o = causal_attention(q, k, v, sliding_window=win, causal=causal)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    return o @ p["w_o"], new_cache
+
+
+# ------------------------------------------------------------- cross-attn
+def init_cross_attention(rng, cfg, dtype=None):
+    d, hd = cfg.d_model, cfg.hd
+    dtype = dtype or cfg.dtype
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_q": layers.dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "w_kv": layers.dense_init(ks[1], d, 2 * cfg.n_kv_heads * hd, dtype),
+        "w_o": layers.dense_init(ks[2], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attention_block(x, enc_kv, p, cfg):
+    """x (B,S,d) attends to precomputed encoder K/V (B,T,Hkv,hd)."""
+    B, S, _ = x.shape
+    q = (x @ p["w_q"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    o = causal_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return o @ p["w_o"]
+
+
+def encode_cross_kv(enc_out, p, cfg):
+    B, T, _ = enc_out.shape
+    kv = (enc_out @ p["w_kv"]).reshape(B, T, 2, cfg.n_kv_heads, cfg.hd)
+    return {"k": kv[:, :, 0], "v": kv[:, :, 1]}

@@ -1,0 +1,96 @@
+"""Sentence encoder + sectioning classifier (paper §3.2.2).
+
+The paper encodes each CV sentence with BERT (uncased_L-12_H-768_A-12 —
+768-d [CLS] vectors) and classifies it into 4 sections with the Keras
+model:
+
+    dense_1: Dense(768 -> 200), dense_2: Dense(200 -> 4)
+    Total params: 154,604  (153,800 + 804)
+
+We reproduce the classifier EXACTLY (154,604 params, verified in tests)
+and stand in for the frozen BERT with a small JAX transformer encoder
+(mean-pooled) — the paper treats BERT as a black-box embedding service,
+so its internals are not part of the contribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.configs.base import ArchConfig
+
+EMBED_DIM = 768
+HIDDEN = 200
+N_SECTIONS = 4
+
+
+def encoder_config(vocab_size: int = 8192) -> ArchConfig:
+    return ArchConfig(
+        name="sentence-encoder", family="dense", n_layers=4, d_model=EMBED_DIM,
+        n_heads=12, n_kv_heads=12, head_dim=64, d_ff=3072,
+        vocab_size=vocab_size, act="gelu", rope="learned",
+        dtype=jnp.float32, remat=False, source="arXiv:1810.04805 (stand-in)")
+
+
+def init_encoder(rng, cfg: ArchConfig):
+    ks = jax.random.split(rng, 4)
+    blocks = []
+    from repro.models import transformer
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(cfg.dtype),
+        "pos": (jax.random.normal(ks[1], (512, cfg.d_model)) * 0.02
+                ).astype(cfg.dtype),
+        "blocks": transformer.init_stack(ks[2], cfg, cfg.n_layers, "dense"),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+
+
+def encode_sentences(params, cfg: ArchConfig, tokens: jnp.ndarray,
+                     mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """tokens (B, S) int32 -> sentence embeddings (B, 768) (mean-pooled)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :S, :]
+
+    def body(h, bp):
+        hh = layers.rmsnorm(h, bp["ln1"], cfg.norm_eps)
+        o, _ = attention.attention_block(hh, bp["attn"], cfg, mode="train",
+                                         causal=False)
+        h = h + o
+        hh = layers.rmsnorm(h, bp["ln2"], cfg.norm_eps)
+        return h + layers.mlp(hh, bp["ffn"], cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if mask is None:
+        return jnp.mean(x, axis=1)
+    m = mask[..., None].astype(x.dtype)
+    return jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+
+# ------------------------------------------------------- section classifier
+def init_classifier(rng):
+    """The paper's exact sequential model: 768->200->4 with biases."""
+    k1, k2 = jax.random.split(rng)
+    return {
+        "dense_1": {"w": layers.dense_init(k1, EMBED_DIM, HIDDEN, jnp.float32),
+                    "b": jnp.zeros((HIDDEN,), jnp.float32)},
+        "dense_2": {"w": layers.dense_init(k2, HIDDEN, N_SECTIONS, jnp.float32),
+                    "b": jnp.zeros((N_SECTIONS,), jnp.float32)},
+    }
+
+
+def classifier_n_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def classify_sections(params, embeddings: jnp.ndarray) -> jnp.ndarray:
+    """embeddings (B, 768) -> section logits (B, 4)."""
+    h = jnp.tanh(embeddings @ params["dense_1"]["w"] + params["dense_1"]["b"])
+    return h @ params["dense_2"]["w"] + params["dense_2"]["b"]
+
+
+def classifier_loss(params, embeddings, labels):
+    logits = classify_sections(params, embeddings)
+    return layers.softmax_xent(logits, labels)

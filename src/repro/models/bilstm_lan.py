@@ -1,0 +1,128 @@
+"""Bi-LSTM with hierarchically-refined Label Attention Network (LAN) —
+the paper's NER model family [Cui & Zhang, arXiv:1908.08676] (§3.2.3).
+
+Each layer: BiLSTM over the token sequence, then multi-head attention
+where the *label embeddings* are keys/values; the label-aware summary is
+concatenated to the BiLSTM output ("hierarchical refinement"). The LAST
+layer's attention distribution (single head over labels) IS the
+prediction — no CRF/softmax layer, which is the point of the paper's
+model choice (Bi-LSTM(LAN) > Bi-LSTM(CRF/softmax) on long-range label
+dependencies).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclass(frozen=True)
+class LANConfig:
+    vocab_size: int = 4096
+    n_labels: int = 9
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    dtype: object = jnp.float32
+
+
+# ------------------------------------------------------------------- LSTM
+def init_lstm(rng, d_in: int, d_h: int, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w": layers.dense_init(k1, d_in, 4 * d_h, dtype),
+        "u": layers.dense_init(k2, d_h, 4 * d_h, dtype),
+        "b": jnp.zeros((4 * d_h,), dtype),
+    }
+
+
+def lstm_scan(p, x, reverse: bool = False):
+    """x (B, S, d_in) -> h (B, S, d_h)."""
+    B, S, _ = x.shape
+    d_h = p["u"].shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ p["w"] + h @ p["u"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, d_h), x.dtype), jnp.zeros((B, d_h), x.dtype))
+    xs = jnp.moveaxis(x, 1, 0)
+    _, hs = jax.lax.scan(step, init, xs, reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def bilstm(p, x):
+    fwd = lstm_scan(p["fwd"], x)
+    bwd = lstm_scan(p["bwd"], x, reverse=True)
+    return jnp.concatenate([fwd, bwd], axis=-1)       # (B, S, 2*d_h)
+
+
+# ------------------------------------------------------------------- LAN
+def label_attention(h, label_emb, p, n_heads: int):
+    """h (B,S,d), label_emb (L,d) -> (attn_out (B,S,d), scores (B,S,L))."""
+    B, S, d = h.shape
+    L = label_emb.shape[0]
+    hd = d // n_heads
+    q = (h @ p["w_q"]).reshape(B, S, n_heads, hd)
+    k = (label_emb @ p["w_k"]).reshape(L, n_heads, hd)
+    v = (label_emb @ p["w_v"]).reshape(L, n_heads, hd)
+    scores = jnp.einsum("bshd,lhd->bshl", q, k) / jnp.sqrt(float(hd))
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bshl,lhd->bshd", w, v).reshape(B, S, d)
+    return out, jnp.mean(scores, axis=2)               # head-avg (B,S,L)
+
+
+def init_lan_layer(rng, d_in: int, d_model: int, dtype):
+    ks = jax.random.split(rng, 5)
+    d_h = d_model // 2
+    return {
+        "fwd": init_lstm(ks[0], d_in, d_h, dtype),
+        "bwd": init_lstm(ks[1], d_in, d_h, dtype),
+        "w_q": layers.dense_init(ks[2], d_model, d_model, dtype),
+        "w_k": layers.dense_init(ks[3], d_model, d_model, dtype),
+        "w_v": layers.dense_init(ks[4], d_model, d_model, dtype),
+    }
+
+
+def init_params(rng, cfg: LANConfig):
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    lans = []
+    d_in = cfg.d_model
+    for i in range(cfg.n_layers):
+        lans.append(init_lan_layer(ks[i], d_in, cfg.d_model, cfg.dtype))
+        d_in = 2 * cfg.d_model      # [h ; label-attn] concat feeds next layer
+    return {
+        "embed": (jax.random.normal(ks[-2], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(cfg.dtype),
+        "label_embed": (jax.random.normal(ks[-1], (cfg.n_labels, cfg.d_model))
+                        * 0.02).astype(cfg.dtype),
+        "lan_layers": lans,
+    }
+
+
+def forward(params, cfg: LANConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B,S) -> per-token label logits (B,S,n_labels)."""
+    x = params["embed"][tokens]
+    scores = None
+    for i, lp in enumerate(params["lan_layers"]):
+        h = bilstm(lp, x)                              # (B,S,d_model)
+        attn, scores = label_attention(h, params["label_embed"], lp,
+                                       cfg.n_heads)
+        x = jnp.concatenate([h, attn], axis=-1)
+    return scores                                       # last layer scores
+
+
+def loss(params, cfg: LANConfig, tokens, labels, mask=None):
+    logits = forward(params, cfg, tokens)
+    return layers.softmax_xent(logits, labels, mask)
+
+
+def predict(params, cfg: LANConfig, tokens):
+    return jnp.argmax(forward(params, cfg, tokens), axis=-1)

@@ -1,0 +1,146 @@
+"""Shared building blocks: norms, activations, rotary embeddings, inits.
+
+Params are plain pytrees (nested dicts of jnp arrays). Layer-stacked params
+carry a leading L axis and are consumed by ``lax.scan`` in the backbones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def stacked(rng, n: int, init_fn):
+    """vmap an init over a leading layer axis."""
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- activations
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def act_fn(name: str):
+    if name == "swiglu" or name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu
+    raise ValueError(f"unknown activation {name}")
+
+
+def mlp(x, p, act: str):
+    """Gated (swiglu) or plain 2-matrix MLP. p: {w_in, w_out[, w_gate]}."""
+    if "w_gate" in p:
+        h = act_fn(act)(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = act_fn(act)(x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if act in GATED_ACTS:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------- rotary
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(0.25, 0.375, 0.375)) -> jnp.ndarray:
+    """Multimodal RoPE [arXiv:2409.12191]: rotary dims split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, hd); positions: (B, 3, S) int32.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    # section boundaries over the half-dims
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    sec_id = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((half - n_t - n_h,), 2, jnp.int32),
+    ])                                                   # (half,)
+    # pos per (B, S, half): pick the section's position id
+    pos_t = positions.astype(jnp.float32).transpose(0, 2, 1)   # (B, S, 3)
+    pos = jnp.take(pos_t, sec_id, axis=-1)                      # (B, S, half)
+    ang = pos[..., None, :] * freqs                      # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: jnp.ndarray, d: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal position embedding, computed on the fly
+    (no table => no max-length gate for the 32k/500k serving shapes).
+    positions: (...,) int -> (..., d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean cross-entropy in f32. logits (..., V), labels (...) int.
+
+    The gold logit is extracted with a fused one-hot dot rather than
+    ``take_along_axis`` so a vocab-sharded logits tensor never gets
+    all-gathered by the SPMD partitioner (the elementwise+reduce stays
+    sharded; only the scalar partials are combined).
+    """
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,127 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: attention-free time-mix with
+data-dependent decay (the paper's headline feature) + squared-ReLU channel-mix.
+
+Recurrence per head (state S: hd x hd):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+with w_t = exp(-exp(w0 + lora(x_t)))  — data-dependent, per channel.
+
+The sequence path is a ``lax.scan``; the Pallas kernel in
+``repro.kernels.rwkv_scan`` implements the same recurrence with time-block
+tiling for TPU. Decode carries (S, last_x) as the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+LORA_RANK = 64
+
+
+def init_time_mix(rng, cfg, dtype=None):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dtype = dtype or cfg.dtype
+    ks = jax.random.split(rng, 10)
+    r = min(LORA_RANK, d)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),          # r,k,v,g,w token-shift mixes
+        "w_r": layers.dense_init(ks[0], d, H * hd, dtype),
+        "w_k": layers.dense_init(ks[1], d, H * hd, dtype),
+        "w_v": layers.dense_init(ks[2], d, H * hd, dtype),
+        "w_g": layers.dense_init(ks[3], d, H * hd, dtype),
+        "w_o": layers.dense_init(ks[4], H * hd, d, dtype),
+        "decay_lora_a": layers.dense_init(ks[5], d, r, dtype),
+        "decay_lora_b": layers.dense_init(ks[6], r, H * hd, dtype),
+        "decay_base": -5.0 * jnp.ones((H * hd,), jnp.float32),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),
+        "ln_out": jnp.ones((H * hd,), dtype),
+    }
+
+
+def init_channel_mix(rng, cfg, dtype=None):
+    d = cfg.d_model
+    dtype = dtype or cfg.dtype
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),
+        "w_r": layers.dense_init(ks[0], d, d, dtype),
+        "w_k": layers.dense_init(ks[1], d, cfg.d_ff, dtype),
+        "w_v": layers.dense_init(ks[2], cfg.d_ff, d, dtype),
+    }
+
+
+def _shift(x, last_x):
+    """x (B,S,d); last_x (B,d) value preceding x[:,0]. Returns x_{t-1}."""
+    return jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay(xw, p):
+    """Data-dependent per-channel decay in (0,1). xw: (..., d)."""
+    lora = jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    return jnp.exp(-jnp.exp(p["decay_base"] + lora.astype(jnp.float32)))
+
+
+def _project(x, last_x, p, cfg):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xx = _shift(x, last_x) - x
+    mu = p["mu"]
+    xr, xk, xv, xg, xw = (x + xx * mu[i] for i in range(5))
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(xw, p).reshape(B, S, H, hd)
+    return r, k, v, g, w
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence. r/k/v/w: (B,S,H,hd) f32; u: (H,hd);
+    state: (B,H,hd,hd). Returns (out (B,S,H,hd), new_state).
+
+    On TPU the Pallas kernel executes this (state carried in VMEM across
+    time blocks — the HBM state round-trip of the XLA scan is rwkv's
+    dominant roofline term); the lax.scan path is the CPU/oracle route."""
+    if jax.default_backend() == "tpu" and r.shape[1] % 64 == 0:
+        from repro.kernels.rwkv_scan.ops import wkv
+        return wkv(r, k, v, w, u, state, bt=64)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[..., :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def time_mix(x, p, cfg, cache=None):
+    """cache: {"state": (B,H,hd,hd) f32, "last_x": (B,d)} or None."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    if cache is None:
+        cache = {"state": jnp.zeros((B, H, hd, hd), jnp.float32),
+                 "last_x": jnp.zeros((B, d), x.dtype)}
+    r, k, v, g, w = _project(x, cache["last_x"], p, cfg)
+    out, state = wkv_scan(r, k, v, w, p["bonus_u"], cache["state"])
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    out = layers.rmsnorm(out, p["ln_out"], cfg.norm_eps)
+    out = (out * g) @ p["w_o"]
+    return out, {"state": state, "last_x": x[:, -1, :]}
+
+
+def channel_mix(x, p, cfg, cache=None):
+    B, S, d = x.shape
+    if cache is None:
+        cache = {"last_x": jnp.zeros((B, d), x.dtype)}
+    xx = _shift(x, cache["last_x"]) - x
+    xr = x + xx * p["mu"][0]
+    xk = x + xx * p["mu"][1]
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    h = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return r * (h @ p["w_v"]), {"last_x": x[:, -1, :]}

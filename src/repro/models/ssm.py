@@ -1,0 +1,74 @@
+"""Mamba-style selective SSM path (used by the hymba hybrid heads).
+
+Diagonal selective state space:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t
+    y_t = C_t . h_t + D * u_t
+with input-dependent dt, B, C (selectivity) and state size N = cfg.ssm_state.
+Sequence path is ``lax.scan``; decode carries h (B, d_inner, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ssm(rng, cfg, dtype=None):
+    d, di, N = cfg.d_model, cfg.dinner, max(cfg.ssm_state, 1)
+    dtype = dtype or cfg.dtype
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": layers.dense_init(ks[0], d, di, dtype),
+        "w_gate": layers.dense_init(ks[1], d, di, dtype),
+        "w_dt": layers.dense_init(ks[2], d, di, dtype),
+        "w_bc": layers.dense_init(ks[3], d, 2 * N, dtype),
+        "w_out": layers.dense_init(ks[4], di, d, dtype),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((di, 1), jnp.float32),       # (di, N)
+        "D": jnp.ones((di,), jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def selective_scan(u, dt, B, C, A, D, state):
+    """u,dt: (B,S,di) f32; B,C: (B,S,N) f32; A: (di,N); state: (B,di,N).
+
+    Returns (y (B,S,di) f32, new_state).
+
+    On TPU the Pallas kernel executes this (state carried in VMEM across
+    time blocks); the lax.scan path is the CPU/oracle route.
+    """
+    if jax.default_backend() == "tpu" and u.shape[1] % 64 == 0 \
+            and u.shape[2] % 32 == 0:
+        from repro.kernels.ssm_scan.kernel import ssm_scan
+        return ssm_scan(u, dt, B, C, A, D, state, bt=64, interpret=False)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp                         # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A)                 # (B,di,N)
+        dBu = dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * u_t
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, B, C))
+    state, y = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def ssm_block(x, p, cfg, cache=None):
+    """x (B,S,d) -> (out (B,S,d), cache {"state": (B,di,N)})."""
+    Bsz, S, d = x.shape
+    di, N = cfg.dinner, max(cfg.ssm_state, 1)
+    if cache is None:
+        cache = {"state": jnp.zeros((Bsz, di, N), jnp.float32)}
+    u = (x @ p["w_in"]).astype(jnp.float32)
+    g = jax.nn.silu(x @ p["w_gate"])
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    bc = (x @ p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                    # (B,S,N) each
+    A = -jnp.exp(p["A_log"])                              # (di,N), negative
+    y, state = selective_scan(u, dt, Bm, Cm, A, p["D"], cache["state"])
+    out = (y.astype(x.dtype) * g) @ p["w_out"]
+    return out, {"state": state}

@@ -1,0 +1,128 @@
+"""Serving engine: KV-cache lifecycle + batched prefill/decode for one
+model, and a request scheduler that batches concurrent requests (the
+substrate under every PaaS replica when the payload is an LM).
+
+The engine slots requests into a fixed-capacity batch (contiguous KV
+cache, one slot per sequence), prefills new requests, then decodes all
+active slots in lock-step — continuous-batching-lite, matching the
+paper's near-real-time serving target rather than max-throughput.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list                    # token ids
+    max_new_tokens: int = 8
+    out_tokens: list = field(default_factory=list)
+    submitted_s: float = field(default_factory=time.perf_counter)
+    done_s: float | None = None
+
+    @property
+    def latency_s(self) -> float:
+        return (self.done_s or time.perf_counter()) - self.submitted_s
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, batch_size: int = 4,
+                 max_seq: int = 256, plan=None, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.plan = plan
+        cfg = model.cfg
+        self.caches = model.init_cache(batch_size, max_seq)
+        self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
+        self.slot_req: list = [None] * batch_size
+        # jitted single-slot prefill (B=1) and batched decode
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, plan))
+        self._decode = jax.jit(
+            lambda p, t, c, l: model.decode_step(p, t, c, l, plan))
+        self.metrics = {"prefills": 0, "decode_steps": 0, "completed": 0}
+
+    # ------------------------------------------------------------- slots
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def add_request(self, req: Request) -> bool:
+        """Prefill into a free slot; False if engine is full."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        P = len(req.prompt)
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        # write the prefill cache into the slot (host-side copy; fine at
+        # example scale — the dry-run path never goes through here)
+        for key in self.caches:
+            c = np.array(self.caches[key])          # writable host copy
+            pref = np.asarray(cache[key])
+            if c.ndim >= 3 and pref.ndim == c.ndim and \
+                    c.shape[2] == self.max_seq and pref.shape[2] <= self.max_seq:
+                c[:, slot] = 0
+                c[:, slot, :pref.shape[2]] = pref[:, 0]
+            else:  # state-style caches (L, B, ...)
+                c[:, slot] = pref[:, 0]
+            self.caches[key] = jnp.asarray(c)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(nxt)
+        self.slot_req[slot] = req
+        self.slot_len[slot] = P
+        self.metrics["prefills"] += 1
+        return True
+
+    # ------------------------------------------------------------- decode
+    def step(self) -> list:
+        """One lock-step decode over all active slots. Returns finished
+        requests."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        if len(set(self.slot_len[i] for i in active)) == 1:
+            cache_len = jnp.int32(int(self.slot_len[active[0]]))
+        else:
+            # lock-step engine: pad to the longest (masking handles shorter)
+            cache_len = jnp.int32(int(max(self.slot_len[i] for i in active)))
+        tok = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            tok[i, 0] = self.slot_req[i].out_tokens[-1]
+        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
+                                           self.caches, cache_len)
+        self.metrics["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        finished = []
+        for i in active:
+            r = self.slot_req[i]
+            r.out_tokens.append(int(nxt[i]))
+            self.slot_len[i] += 1
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done_s = time.perf_counter()
+                finished.append(r)
+                self.slot_req[i] = None
+                self.slot_len[i] = 0
+                self.metrics["completed"] += 1
+        return finished
+
+    # ------------------------------------------------------------- run
+    def run(self, requests: list) -> list:
+        """Serve a list of requests to completion (batched)."""
+        pending = list(requests)
+        done: list = []
+        while pending or any(r is not None for r in self.slot_req):
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+        return done

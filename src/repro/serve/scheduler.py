@@ -1,0 +1,91 @@
+"""Request scheduler in front of the ServingEngine: admission queue,
+continuous batching, and per-request SLO tracking.
+
+The paper's front-end (NGINX + parser PaaS) admits requests at arbitrary
+concurrency and the deployment's worker slots queue the excess
+(bench_concurrency reproduces that). This module is the LM analogue for
+a single model service: requests arrive asynchronously, the scheduler
+fills free engine slots in arrival order (FIFO) or shortest-prompt-first
+(SPF — reduces head-of-line blocking from long prefills), and every
+decode tick serves all active slots (continuous batching).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.serve.engine import Request, ServingEngine
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    ticks: int = 0
+    queue_peak: int = 0
+    latencies_s: list = field(default_factory=list)
+    queue_wait_s: list = field(default_factory=list)
+
+    def percentile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        xs = sorted(self.latencies_s)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+class Scheduler:
+    """Admission + slot-filling policy over a ServingEngine."""
+
+    def __init__(self, engine: ServingEngine, *, policy: str = "fifo",
+                 max_queue: int = 0):
+        assert policy in ("fifo", "spf")
+        self.engine = engine
+        self.policy = policy
+        self.max_queue = max_queue            # 0 = unbounded
+        self.queue: deque = deque()
+        self.stats = SchedulerStats()
+        self._enq_t: dict[int, float] = {}
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> bool:
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self.stats.rejected += 1
+            return False
+        self.queue.append(req)
+        self._enq_t[req.rid] = time.perf_counter()
+        self.stats.admitted += 1
+        self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
+        return True
+
+    def _next_index(self) -> int:
+        if self.policy == "spf":
+            return min(range(len(self.queue)),
+                       key=lambda i: len(self.queue[i].prompt))
+        return 0
+
+    # ------------------------------------------------------------ serving
+    def tick(self) -> list:
+        """Fill free slots, run one decode step. Returns finished reqs."""
+        while self.queue:
+            i = self._next_index()
+            req = self.queue[i]
+            if not self.engine.add_request(req):
+                break                          # engine full
+            del self.queue[i]
+            self.stats.queue_wait_s.append(
+                time.perf_counter() - self._enq_t.pop(req.rid))
+        done = self.engine.step()
+        self.stats.ticks += 1
+        for r in done:
+            self.stats.completed += 1
+            self.stats.latencies_s.append(r.latency_s)
+        return done
+
+    def drain(self) -> list:
+        """Run until queue and engine are empty."""
+        out = []
+        while self.queue or any(r is not None for r in self.engine.slot_req):
+            out.extend(self.tick())
+        return out

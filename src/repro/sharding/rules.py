@@ -1,0 +1,244 @@
+"""Divisibility-aware sharding policy: 2-D (FSDP x TP) weights, batch- or
+sequence-sharded activations/caches.
+
+Baseline policy (hillclimbed variants live in ``repro.sharding.variants``):
+
+* weight matrices: input dim over the FSDP axes ``("pod","data")``,
+  output dim over ``"model"`` — except output projections (``w_o`` /
+  ``w_out``), whose *input* dim takes ``"model"`` (Megatron pairing, so
+  column-parallel -> row-parallel needs no resharding).
+* MoE experts: expert dim over ``"model"`` when divisible (EP, kimi-k2),
+  else expert d_ff over ``"model"`` (TP, grok-1); rows over FSDP.
+* activations: batch over ``("pod","data")``.
+* decode KV cache: sequence over ``"model"`` (flash-decoding split);
+  batch=1 long-context shards the sequence over *all* axes.
+* any dim that does not divide its axes falls back to replication
+  (e.g. whisper's vocab 51865, hymba's 32001).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+DECODE_TP_WEIGHT_BUDGET = 6 * 2**30   # bytes/device for gather-free decode
+
+
+@dataclass
+class ParallelPlan:
+    mesh: Mesh | None
+    batch_axes: tuple = ("data",)          # includes "pod" when present
+    model_axis: str = "model"
+    moe_mode: str | None = None            # "ep" | "tp" | None
+    kind: str = "train"                    # train | prefill | decode
+    weight_fsdp: tuple = ("data",)         # axes sharding weight rows
+    _cfg: Any = field(default=None, repr=False)
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def make(cls, mesh, cfg, shape_kind: str = "train"):
+        if mesh is None:
+            return cls(None, (), moe_mode=None, kind=shape_kind,
+                       weight_fsdp=(), _cfg=cfg)
+        batch_axes = tuple(n for n in ("pod", "data") if n in mesh.shape)
+        moe_mode = None
+        if cfg is not None and cfg.n_experts:
+            nm = mesh.shape["model"]
+            moe_mode = "ep" if cfg.n_experts % nm == 0 else "tp"
+            if moe_mode == "tp":
+                assert cfg.moe_d_ff % nm == 0, "MoE unshardable on this mesh"
+        # Decode latency rule (§Perf, deepseek-7b x decode_32k): FSDP row
+        # sharding forces a per-layer weight all-gather per TOKEN at
+        # decode. When the weights fit the model axis alone, replicate
+        # them over the batch axes instead — gather-free decode. Models
+        # too large for that (nemotron/grok/kimi) keep 2-D sharding and
+        # pay the gather: capacity wins over latency.
+        weight_fsdp = batch_axes
+        if shape_kind == "decode" and cfg is not None:
+            per_dev = 2 * cfg.n_params() / mesh.shape["model"]
+            if per_dev <= DECODE_TP_WEIGHT_BUDGET:
+                weight_fsdp = ()
+        return cls(mesh, batch_axes, moe_mode=moe_mode, kind=shape_kind,
+                   weight_fsdp=weight_fsdp, _cfg=cfg)
+
+    # ------------------------------------------------------------- helpers
+    def axis_size(self, names) -> int:
+        return _axsize(self.mesh, names)
+
+    def _div(self, dim: int, names):
+        """Return axes (possibly reduced or None) that evenly divide dim."""
+        if self.mesh is None:
+            return None
+        if isinstance(names, str):
+            names = (names,)
+        while names:
+            if dim % _axsize(self.mesh, names) == 0:
+                return names if len(names) > 1 else names[0]
+            names = names[1:]   # drop leading (biggest-group) axis
+        return None
+
+    def ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain_act(self, x):
+        if self.mesh is None:
+            return x
+        b = self._div(x.shape[0], self.batch_axes)
+        return jax.lax.with_sharding_constraint(
+            x, self.ns(P(b, *([None] * (x.ndim - 1)))))
+
+    def constrain_residual(self, x):
+        """Sequence-parallel residual stream: between blocks, activations
+        (B, S, d) are sharded batch x seq over (batch_axes, model) so the
+        remat residual stack shrinks by the model-axis size (Megatron-SP).
+        The partitioner inserts the SP<->TP transitions around attention."""
+        if self.mesh is None:
+            return x
+        if x.ndim != 3:
+            return self.constrain_act(x)
+        b = self._div(x.shape[0], self.batch_axes)
+        s = self._div(x.shape[1], (self.model_axis,))
+        return jax.lax.with_sharding_constraint(x, self.ns(P(b, s, None)))
+
+    def constrain_logits(self, x):
+        if self.mesh is None:
+            return x
+        b = self._div(x.shape[0], self.batch_axes)
+        v = self._div(x.shape[-1], self.model_axis)
+        return jax.lax.with_sharding_constraint(
+            x, self.ns(P(b, *([None] * (x.ndim - 2)), v)))
+
+    # ------------------------------------------------------------- params
+    def param_spec(self, path: tuple, shape: tuple) -> P:
+        """path: tuple of str keys from the params pytree root."""
+        names = [str(getattr(k, "key", k)) for k in path]
+        leaf = names[-1]
+        fsdp, model = self.weight_fsdp, self.model_axis
+        stacked = "blocks" in names  # leading L axis
+        dims = list(shape[1:]) if stacked else list(shape)
+        nd = len(dims)
+
+        def build(spec_tail):
+            full = ([None] + spec_tail) if stacked else spec_tail
+            return P(*full)
+
+        if nd <= 1:
+            return build([None] * nd)
+
+        is_moe = "moe" in names and leaf in ("w_in", "w_out", "w_gate")
+        if is_moe and nd == 3:
+            E, a, b = dims
+            if self.moe_mode == "ep":
+                e_ax = self._div(E, model)
+                # rows = input dim of the matmul
+                r = 1 if leaf != "w_out" else 2
+                tail = [e_ax, None, None]
+                tail[r] = self._div(dims[r], fsdp)
+                return build(tail)
+            # tp mode: d_ff dim over model, other dim over fsdp
+            f_dim = 2 if leaf != "w_out" else 1
+            o_dim = 1 if leaf != "w_out" else 2
+            tail = [None, None, None]
+            tail[f_dim] = self._div(dims[f_dim], model)
+            tail[o_dim] = self._div(dims[o_dim], fsdp)
+            return build(tail)
+
+        if leaf == "embed":
+            return P(self._div(dims[0], model), self._div(dims[1], fsdp))
+        if leaf in ("lm_head",):
+            return P(self._div(dims[0], fsdp), self._div(dims[1], model))
+        if leaf in ("pos_embed",):
+            return build([None, self._div(dims[-1], fsdp)]) if nd == 2 \
+                else P(None, None)
+        if leaf == "router":
+            return build([None] * nd)
+
+        if nd == 2:
+            din, dout = dims
+            # Head-boundary-aware attention TP (§Perf, qwen2-vl x
+            # prefill_32k): column-sharding q/k/v projections is only
+            # legal along whole heads. Slicing through a head's hd makes
+            # the score dot PARTIAL over the contracting dim, which the
+            # partitioner completes with an all-reduce of the full
+            # (B,H,S,T) score tensor per layer per chunk (observed 1.3 TB
+            # per prefill step). When heads don't divide the model axis,
+            # replicate those columns instead (the projections are small)
+            # and let sequence parallelism carry the attention sharding.
+            nm = _axsize(self.mesh, model)
+            cfg = self._cfg
+            if cfg is not None and leaf in ("w_q", "w_kv", "w_o"):
+                heads_ok = cfg.n_heads % nm == 0
+                kv_ok = cfg.n_kv_heads % nm == 0 or cfg.n_kv_heads == 0
+                if leaf == "w_q" and not heads_ok:
+                    return build([self._div(din, fsdp), None])
+                if leaf == "w_kv" and not kv_ok:
+                    return build([self._div(din, fsdp), None])
+                if leaf == "w_o" and not heads_ok:
+                    return build([None, self._div(dout, fsdp)])
+            if leaf in ("w_o", "w_out", "w_v"):   # row-parallel outputs
+                return build([self._div(din, model), self._div(dout, fsdp)])
+            return build([self._div(din, fsdp), self._div(dout, model)])
+        return build([None] * nd)
+
+    def param_shardings(self, params_tree):
+        """Map a pytree of arrays/ShapeDtypeStructs -> NamedShardings."""
+        if self.mesh is None:
+            return None
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self.ns(self.param_spec(path, leaf.shape)),
+            params_tree)
+
+    # ------------------------------------------------------------- batches
+    def batch_spec(self, leaf_path: tuple, shape: tuple) -> P:
+        name = str(getattr(leaf_path[-1], "key", leaf_path[-1]))
+        if not shape:
+            return P()
+        b = self._div(shape[0], self.batch_axes)
+        return P(b, *([None] * (len(shape) - 1)))
+
+    def cache_spec(self, leaf_path: tuple, shape: tuple) -> P:
+        """Decode caches: (L, B, T, ...) K/V seq-sharded over model;
+        batch=1 shards T over every axis."""
+        name = str(getattr(leaf_path[-1], "key", leaf_path[-1]))
+        L, B = shape[0], shape[1]
+        b = self._div(B, self.batch_axes)
+        if name in ("k", "v"):
+            T = shape[2]
+            if b is None:
+                seq = self._div(T, self.batch_axes + (self.model_axis,))
+            else:
+                seq = self._div(T, self.model_axis)
+            return P(None, b, seq, None, None)
+        if name in ("xk", "xv"):
+            return P(None, b, None, None, None)
+        if name == "state":          # rwkv (L,B,H,hd,hd)
+            h = self._div(shape[2], self.model_axis)
+            return P(None, b, h, None, None)
+        if name == "ssm_state":      # (L,B,di,N)
+            di = self._div(shape[2], self.model_axis)
+            return P(None, b, di, None)
+        return P(*([None, b] + [None] * (len(shape) - 2)))
+
+    def input_shardings(self, specs: dict):
+        """NamedShardings for the dry-run input tree (train/prefill batch
+        or decode (token, cache, cache_len))."""
+        if self.mesh is None:
+            return None
+
+        def assign(path, leaf):
+            names = [str(getattr(k, "key", k)) for k in path]
+            if "cache" in names:
+                return self.ns(self.cache_spec(path, leaf.shape))
+            return self.ns(self.batch_spec(path, leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(assign, specs)

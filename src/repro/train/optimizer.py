@@ -1,0 +1,78 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule, from scratch.
+
+State is a pytree mirroring params (mu, nu in f32) + a scalar step, so it
+inherits the params' sharding under pjit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(c.warmup_steps, 1)
+    prog = (step - c.warmup_steps) / jnp.maximum(
+        c.total_steps - c.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = c.min_lr_ratio + (1 - c.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def init_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, c: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(c, step)
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = c.b1 * mu + (1 - c.b1) * g
+        nu = c.b2 * nu + (1 - c.b2) * jnp.square(g)
+        u = (mu / b1c) / (jnp.sqrt(nu / b2c) + c.eps)
+        u = u + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

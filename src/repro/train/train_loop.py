@@ -1,0 +1,78 @@
+"""Training loop: jitted AdamW step (optionally pjit-sharded), metric
+logging, periodic chunked checkpointing, deterministic resume."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint, optimizer as opt_mod
+from repro.train.data import PackedLMDataset, sharded_batches
+
+
+@dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0          # 0 = only at the end
+    ckpt_root: str = "checkpoints"
+    ckpt_name: str = "run"
+    opt: opt_mod.AdamWConfig = field(default_factory=opt_mod.AdamWConfig)
+
+
+def make_train_step(model, oc: opt_mod.AdamWConfig, plan=None):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.train_loss(p, batch, plan)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_s, om = opt_mod.apply_updates(params, grads, opt_state, oc)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    params: object
+    opt_state: object
+    history: list
+    steps_per_s: float
+
+
+def train(model, dataset: PackedLMDataset, tc: TrainerConfig, *,
+          params=None, plan=None, start_step: int = 0,
+          rng=None) -> TrainResult:
+    rng = rng if rng is not None else jax.random.key(0)
+    if params is None:
+        params = model.init(rng)
+    opt_state = opt_mod.init_state(params)
+    step_fn = jax.jit(make_train_step(model, tc.opt, plan),
+                      donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    step = start_step
+    for batch in sharded_batches(dataset, plan, tc.n_steps, start_step):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        step += 1
+        if tc.log_every and (step % tc.log_every == 0 or step == start_step + 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+        if tc.ckpt_every and step % tc.ckpt_every == 0:
+            checkpoint.save(tc.ckpt_root, f"{tc.ckpt_name}-{step}",
+                            {"params": params},
+                            metadata={"step": step})
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    checkpoint.save(tc.ckpt_root, f"{tc.ckpt_name}-final",
+                    {"params": params}, metadata={"step": step})
+    return TrainResult(params, opt_state, history,
+                       (step - start_step) / max(dt, 1e-9))

@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,85 @@
+"""NGINX-upstream semantics: round-robin, max_fails/fail_timeout benching,
+backup promotion, recovery."""
+import pytest
+
+from repro.core.balancer import RoundRobinBalancer
+from repro.core.services import Replica, ServiceError
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def mk(name, **kw):
+    return Replica(name, handler=lambda p: (name, p), **kw)
+
+
+def test_round_robin_is_fair():
+    reps = [mk("a"), mk("b"), mk("c")]
+    lb = RoundRobinBalancer(reps)
+    for _ in range(30):
+        lb("x")
+    assert [r.calls for r in reps] == [10, 10, 10]
+
+
+def test_failed_primary_is_benched_and_backup_serves():
+    clock = FakeClock()
+    a, b = mk("a"), mk("backup", backup=True)
+    lb = RoundRobinBalancer([a, b], max_fails=3, fail_timeout=15.0,
+                            clock=clock)
+    a.set_up(False)
+    out, _ = lb("x")          # fails over to backup after benching a
+    assert out == "backup"
+    assert lb.stats["backup_served"] == 1
+    # a benched: requests keep landing on backup without touching a
+    calls_before = a.calls
+    lb("y")
+    assert a.calls == calls_before
+
+
+def test_benched_primary_recovers_after_fail_timeout():
+    clock = FakeClock()
+    a, b = mk("a"), mk("backup", backup=True)
+    lb = RoundRobinBalancer([a, b], max_fails=1, fail_timeout=15.0,
+                            clock=clock)
+    a.set_up(False)
+    lb("x")
+    a.set_up(True)
+    clock.t = 16.0            # past fail_timeout -> unbenched
+    out, _ = lb("y")
+    assert out == "a"
+
+
+def test_backup_not_used_while_primaries_healthy():
+    a, b, bk = mk("a"), mk("b"), mk("backup", backup=True)
+    lb = RoundRobinBalancer([a, b, bk])
+    for _ in range(20):
+        lb("x")
+    assert bk.calls == 0
+
+
+def test_all_down_raises():
+    clock = FakeClock()
+    a, bk = mk("a"), mk("backup", backup=True)
+    lb = RoundRobinBalancer([a, bk], max_fails=1, clock=clock)
+    a.set_up(False)
+    bk.set_up(False)
+    with pytest.raises(ServiceError):
+        lb("x")
+
+
+def test_max_fails_window_semantics():
+    """Failures older than fail_timeout don't count toward max_fails."""
+    clock = FakeClock()
+    a, b = mk("a"), mk("b")
+    lb = RoundRobinBalancer([a, b], max_fails=3, fail_timeout=15.0,
+                            clock=clock)
+    st = lb._state[id(a)]
+    for i in range(2):
+        lb._record_failure(a)
+        clock.t += 20.0        # each failure expires before the next
+    assert st.benched_until <= clock.t   # never benched

@@ -1,0 +1,199 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Deliverable c: for each kernel, sweep shapes/dtypes and assert_allclose
+against the ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                sharded_decode_attention)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rwkv_scan.ops import wkv
+from repro.kernels.rwkv_scan.ref import wkv_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def tol(dt):
+    return 3e-2 if dt == jnp.bfloat16 else 3e-5
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize("B,Hq,Hkv,S,T,hd,win,dt", [
+    (2, 4, 2, 256, 256, 64, 0, jnp.float32),
+    (1, 4, 4, 128, 384, 64, 0, jnp.bfloat16),     # MHA, q shorter than kv
+    (2, 8, 2, 256, 256, 128, 128, jnp.float32),   # sliding window
+    (1, 2, 1, 512, 512, 192, 0, jnp.float32),     # nemotron head_dim
+    (1, 6, 6, 128, 128, 64, 0, jnp.bfloat16),     # whisper-ish
+])
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, T, hd, win, dt):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd), dt)
+    k = jax.random.normal(ks[1], (B, Hkv, T, hd), dt)
+    v = jax.random.normal(ks[2], (B, Hkv, T, hd), dt)
+    out = flash_attention(q, k, v, sliding_window=win)
+    ref = flash_attention_ref(q, k, v, sliding_window=win)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               atol=tol(dt), rtol=tol(dt))
+
+
+def test_flash_attention_non_square_blocks():
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = flash_attention(q, k, v, bq=64, bk=128)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref), atol=3e-5,
+                               rtol=3e-5)
+
+
+# ------------------------------------------------------------------ decode
+@pytest.mark.parametrize("B,Hq,Hkv,T,hd,nv,win,dt", [
+    (2, 8, 2, 512, 64, 300, 0, jnp.float32),
+    (1, 4, 1, 1024, 128, 1000, 256, jnp.bfloat16),
+    (2, 4, 4, 512, 64, 512, 0, jnp.float32),
+    (1, 8, 8, 256, 112, 100, 0, jnp.float32),     # kimi head_dim
+])
+def test_decode_attention_matches_ref(B, Hq, Hkv, T, hd, nv, win, dt):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dt)
+    k = jax.random.normal(ks[1], (B, Hkv, T, hd), dt)
+    v = jax.random.normal(ks[2], (B, Hkv, T, hd), dt)
+    out, lse = decode_attention(q, k, v, nv, sliding_window=win)
+    ro, rl = decode_attention_ref(q, k, v, nv, sliding_window=win)
+    np.testing.assert_allclose(np.float32(out), np.float32(ro),
+                               atol=tol(dt), rtol=tol(dt))
+    np.testing.assert_allclose(np.float32(lse), np.float32(rl),
+                               atol=tol(dt), rtol=tol(dt))
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_decode_lse_combine(n_shards):
+    """Flash-decoding invariant: sequence-sharded partials + LSE merge ==
+    unsharded attention."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, 4, 2 * 64)).reshape(2, 4, 128)
+    k = jax.random.normal(ks[1], (2, 2, 512, 128))
+    v = jax.random.normal(ks[2], (2, 2, 512, 128))
+    ro, _ = decode_attention_ref(q, k, v, 400)
+    so = sharded_decode_attention(q, jnp.split(k, n_shards, 2),
+                                  jnp.split(v, n_shards, 2), 400)
+    np.testing.assert_allclose(np.float32(so), np.float32(ro), atol=3e-5,
+                               rtol=3e-5)
+
+
+# --------------------------------------------------------------------- wkv
+@pytest.mark.parametrize("B,T,H,hd,bt", [
+    (2, 128, 2, 64, 64),
+    (1, 96, 4, 32, 32),
+    (1, 64, 1, 64, 16),
+])
+def test_wkv_scan_matches_ref(B, T, H, hd, bt):
+    ks = jax.random.split(RNG, 5)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jnp.zeros((B, H, hd, hd))
+    out, sT = wkv(r, k, v, w, u, s0, bt=bt)
+    ro, rs = wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.float32(out), np.float32(ro), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.float32(sT), np.float32(rs), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_wkv_state_carry_equals_two_halves():
+    """Running T then T (carrying state) == running 2T at once."""
+    ks = jax.random.split(RNG, 5)
+    B, T, H, hd = 1, 64, 2, 32
+    r = jax.random.normal(ks[0], (B, 2 * T, H, hd))
+    k = jax.random.normal(ks[1], (B, 2 * T, H, hd))
+    v = jax.random.normal(ks[2], (B, 2 * T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, 2 * T, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jnp.zeros((B, H, hd, hd))
+    o_full, s_full = wkv(r, k, v, w, u, s0, bt=32)
+    o1, s1 = wkv(r[:, :T], k[:, :T], v[:, :T], w[:, :T], u, s0, bt=32)
+    o2, s2 = wkv(r[:, T:], k[:, T:], v[:, T:], w[:, T:], u, s1, bt=32)
+    np.testing.assert_allclose(np.float32(jnp.concatenate([o1, o2], 1)),
+                               np.float32(o_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.float32(s2), np.float32(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- ssm scan
+from repro.kernels.ssm_scan.ops import selective_scan as pallas_ssm  # noqa: E402
+from repro.kernels.ssm_scan.ref import ssm_scan_ref  # noqa: E402
+
+
+def _ssm_inputs(key, B, T, di, N, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (B, T, di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, di), dtype)) * 0.1
+    Bm = jax.random.normal(ks[2], (B, T, N), dtype)
+    Cm = jax.random.normal(ks[3], (B, T, N), dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N), jnp.float32) * 0.3)
+    D = jnp.ones((di,), jnp.float32)
+    s0 = jnp.zeros((B, di, N), jnp.float32)
+    return u, dt, Bm, Cm, A, D, s0
+
+
+@pytest.mark.parametrize("B,T,di,N,bt", [
+    (2, 128, 64, 16, 64),
+    (1, 96, 128, 16, 32),
+    (1, 64, 32, 8, 16),
+])
+def test_ssm_scan_matches_ref(B, T, di, N, bt):
+    args = _ssm_inputs(RNG, B, T, di, N)
+    y, sT = pallas_ssm(*args, bt=bt)
+    ry, rs = ssm_scan_ref(*args)
+    np.testing.assert_allclose(np.float32(y), np.float32(ry), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.float32(sT), np.float32(rs), atol=2e-4,
+                               rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_dtypes(dtype):
+    args = _ssm_inputs(RNG, 1, 64, 32, 16, dtype)
+    y, sT = pallas_ssm(*args, bt=32)
+    ry, rs = ssm_scan_ref(*[a.astype(jnp.float32)
+                            if a.dtype == jnp.bfloat16 else a for a in args])
+    atol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.float32(y), np.float32(ry), atol=atol,
+                               rtol=atol)
+
+
+def test_ssm_scan_state_carry_equals_two_halves():
+    B, T, di, N = 1, 64, 32, 16
+    u, dt, Bm, Cm, A, D, s0 = _ssm_inputs(RNG, B, 2 * T, di, N)
+    yf, sf = pallas_ssm(u, dt, Bm, Cm, A, D, s0, bt=32)
+    y1, s1 = pallas_ssm(u[:, :T], dt[:, :T], Bm[:, :T], Cm[:, :T], A, D,
+                        s0, bt=32)
+    y2, s2 = pallas_ssm(u[:, T:], dt[:, T:], Bm[:, T:], Cm[:, T:], A, D,
+                        s1, bt=32)
+    np.testing.assert_allclose(np.float32(jnp.concatenate([y1, y2], 1)),
+                               np.float32(yf), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.float32(s2), np.float32(sf), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssm_scan_matches_model_block():
+    """The kernel agrees with repro.models.ssm.selective_scan — the
+    hymba model path it replaces on TPU."""
+    from repro.models import ssm as model_ssm
+    args = _ssm_inputs(RNG, 2, 64, 32, 16)
+    y, sT = pallas_ssm(*args, bt=32)
+    my, ms = model_ssm.selective_scan(*args)
+    np.testing.assert_allclose(np.float32(y), np.float32(my), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.float32(sT), np.float32(ms), atol=2e-4,
+                               rtol=2e-4)

@@ -1,0 +1,104 @@
+"""MoE dispatch: capacity math, routed-vs-dense equivalence at high
+capacity, partial-expert decomposition (the EP invariant), aux loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models import moe
+
+CFG = get_config("grok-1-314b").reduced()      # 4 experts, top-2
+
+
+def setup(T=64, cf=8.0):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, capacity_factor=cf)
+    rng = jax.random.PRNGKey(0)
+    p = moe.init_moe(rng, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, cfg.d_model),
+                          jnp.float32)
+    return cfg, p, x
+
+
+def dense_reference(x, p, cfg):
+    """No-capacity reference: every token through its top-k experts."""
+    w, ids, _ = moe.route(x, p["router"], cfg)
+    E = cfg.n_experts
+    out = jnp.zeros_like(x)
+    for e in range(E):
+        from repro.models.layers import act_fn
+        pe = {k_: v[e] for k_, v in p.items() if k_ != "router"}
+        if "w_gate" in pe:
+            h = act_fn(cfg.act)(x @ pe["w_gate"]) * (x @ pe["w_in"])
+        else:
+            h = act_fn(cfg.act)(x @ pe["w_in"])
+        ye = h @ pe["w_out"]
+        gate = jnp.sum(jnp.where(ids == e, w, 0.0), axis=-1)
+        out = out + ye * gate[:, None]
+    return out
+
+
+def test_high_capacity_matches_dense_reference():
+    cfg, p, x = setup(cf=8.0)     # capacity >> need: nothing dropped
+    out, _ = moe.moe_ffn_local(x, p, cfg)
+    ref = dense_reference(x, p, cfg)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_expert_partition_sums_to_full():
+    """EP invariant: sum of partial outputs over expert slices == full
+    output (this is what the psum over the model axis computes)."""
+    cfg, p, x = setup(cf=8.0)
+    full, _ = moe.moe_ffn_local(x, p, cfg)
+    half = cfg.n_experts // 2
+    p1, _ = moe.moe_ffn_local(x, p, cfg, e0=0, E_loc=half)
+    p2, _ = moe.moe_ffn_local(x, p, cfg, e0=half, E_loc=half)
+    np.testing.assert_allclose(np.float32(p1 + p2), np.float32(full),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_capacity_drops_tokens_but_stays_finite():
+    cfg, p, x = setup(T=128, cf=0.25)
+    out, aux = moe.moe_ffn_local(x, p, cfg)
+    assert np.all(np.isfinite(np.float32(out)))
+    # with tight capacity, output differs from dense (tokens dropped)
+    ref = dense_reference(x, p, cfg)
+    assert not np.allclose(np.float32(out), np.float32(ref), atol=1e-3)
+
+
+def test_aux_loss_penalizes_imbalance():
+    cfg, p, x = setup()
+    # uniform probabilities -> sum(me*ce) = 1/E -> aux ~ 1 * weight
+    _, _, aux_bal = moe.route(x, p["router"] * 0.0, cfg)
+    # collapsed router: every token to expert 0 -> aux ~ E * weight
+    router0 = jnp.zeros_like(p["router"]).at[:, 0].set(1.0)
+    _, ids, aux_col = moe.route(jnp.ones_like(x), router0, cfg)
+    assert int(jnp.max(ids[:, 0])) == 0
+    assert float(aux_col) > 2.0 * float(aux_bal)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=4))
+def test_dispatch_tables_are_valid(seed):
+    cfg, p, x = setup(T=32, cf=1.0)
+    w, ids, _ = moe.route(x + seed, p["router"], cfg)
+    C = moe.capacity(32, cfg)
+    tok, gw = moe.dispatch_tables(ids, w, 0, cfg.n_experts, C)
+    tok, gw = np.asarray(tok), np.asarray(gw)
+    assert tok.shape == (cfg.n_experts, C)
+    assert ((tok >= 0) & (tok <= 32)).all()           # 32 = pad id
+    assert (gw >= 0).all() and (gw <= 1.0 + 1e-6).all()
+    # each (expert, real-token) slot appears at most once
+    for e in range(cfg.n_experts):
+        real = tok[e][tok[e] < 32]
+        assert len(set(real.tolist())) == len(real)
+
+
+def test_capacity_rounding():
+    cfg, _, _ = setup()
+    c = moe.capacity(1024, cfg)
+    assert c % 8 == 0
+    assert c >= 1024 * cfg.top_k * cfg.capacity_factor / cfg.n_experts

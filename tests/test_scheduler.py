@@ -1,0 +1,71 @@
+"""Scheduler: admission, continuous batching, SPF vs FIFO, bounded queue."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def engine_factory():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jax.numpy.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def make(batch=2, max_seq=64):
+        return ServingEngine(model, params, batch_size=batch,
+                             max_seq=max_seq), cfg
+    return make
+
+
+def _reqs(cfg, lens, max_new=3):
+    rng = jax.random.key(1)
+    out = []
+    for i, L in enumerate(lens):
+        rng, k = jax.random.split(rng)
+        out.append(Request(rid=i, max_new_tokens=max_new,
+                           prompt=jax.random.randint(
+                               k, (L,), 2, cfg.vocab_size).tolist()))
+    return out
+
+
+def test_drain_completes_all(engine_factory):
+    eng, cfg = engine_factory()
+    s = Scheduler(eng)
+    for r in _reqs(cfg, [8, 12, 8, 10, 6]):
+        assert s.submit(r)
+    done = s.drain()
+    assert len(done) == 5
+    assert s.stats.completed == 5
+    assert all(len(r.out_tokens) == 3 for r in done)
+    assert s.stats.queue_peak >= 3          # engine batch=2, 5 submitted
+
+
+def test_bounded_queue_rejects(engine_factory):
+    eng, cfg = engine_factory()
+    s = Scheduler(eng, max_queue=2)
+    reqs = _reqs(cfg, [8] * 4)
+    assert s.submit(reqs[0]) and s.submit(reqs[1])
+    assert not s.submit(reqs[2])
+    assert s.stats.rejected == 1
+    s.drain()
+    assert s.stats.completed == 2
+
+
+def test_spf_prefers_short_prompts(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="spf")
+    reqs = _reqs(cfg, [32, 4, 16], max_new=2)
+    for r in reqs:
+        s.submit(r)
+    order = []
+    while s.queue or any(r is not None for r in eng.slot_req):
+        for r in s.tick():
+            order.append(r.rid)
+    assert order[0] == 1                    # shortest (len 4) served first
+    assert s.stats.completed == 3

@@ -1,0 +1,97 @@
+"""Sharding rules: every produced spec divides its dims; fallbacks fire
+for the known awkward shapes (whisper/hymba vocab, B=1 long-context)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) != 1, reason="rules are validated mesh-free on CPU")
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.sharding.rules import ParallelPlan
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """An abstract mesh over fake devices just for spec computation."""
+    devs = np.array(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return ParallelPlan.make(fake_mesh(), get_config("qwen3-4b"), "train")
+
+
+def spec_divides(spec: P, shape, mesh) -> bool:
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        n = int(np.prod([mesh.shape[a] for a in names]))
+        if dim % n:
+            return False
+    return True
+
+
+def test_param_specs_always_divide(plan):
+    import jax.numpy as jnp
+    from repro.models.model import build_model
+    for arch in ("qwen3-4b", "whisper-tiny", "hymba-1.5b",
+                 "kimi-k2-1t-a32b", "grok-1-314b"):
+        cfg = get_config(arch)
+        p = ParallelPlan.make(plan.mesh, cfg, "train")
+        shapes = jax.eval_shape(build_model(cfg).init, jax.random.key(0))
+        leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for path, leaf in leaves:
+            spec = p.param_spec(path, leaf.shape)
+            assert spec_divides(spec, leaf.shape, plan.mesh), \
+                (arch, path, leaf.shape, spec)
+
+
+def test_non_divisible_vocab_replicates(plan):
+    # whisper vocab 51865 and hymba 32001 are not divisible by 16
+    for arch in ("whisper-tiny", "hymba-1.5b"):
+        cfg = get_config(arch)
+        p = ParallelPlan.make(plan.mesh, cfg, "train")
+        spec = p.param_spec(("embed",), (cfg.vocab_size, cfg.d_model))
+        assert spec[0] is None, arch
+
+
+def test_moe_mode_selection(plan):
+    kimi = ParallelPlan.make(plan.mesh, get_config("kimi-k2-1t-a32b"),
+                             "train")
+    assert kimi.moe_mode == "ep"       # 384 % 16 == 0
+    grok = ParallelPlan.make(plan.mesh, get_config("grok-1-314b"), "train")
+    assert grok.moe_mode == "tp"       # 8 < 16
+
+
+def test_batch1_long_context_shards_sequence(plan):
+    cfg = get_config("qwen3-4b")
+    p = ParallelPlan.make(plan.mesh, cfg, "decode")
+    spec = p.cache_spec(("cache", "k"), (36, 1, 524288, 8, 128))
+    # batch unshardable -> sequence spread over both axes
+    assert spec[1] is None
+    assert spec[2] == ("data", "model")
+    spec2 = p.cache_spec(("cache", "k"), (36, 128, 32768, 8, 128))
+    assert spec2[1] == "data" and spec2[2] == "model"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=8192),
+       st.integers(min_value=1, max_value=8192))
+def test_any_matrix_gets_valid_spec(d1, d2):
+    plan = ParallelPlan.make(fake_mesh(), get_config("qwen3-4b"), "train")
+    spec = plan.param_spec(("blocks", "attn", "w_q"), (36, d1, d2))
+    assert spec_divides(spec, (36, d1, d2), plan.mesh)
+
+
+def test_multipod_fsdp_axes():
+    mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    plan = ParallelPlan.make(mesh, get_config("qwen3-4b"), "train")
+    assert plan.batch_axes == ("pod", "data")
+    spec = plan.param_spec(("blocks", "ffn", "w_in"), (36, 2560, 9728))
+    assert spec == P(None, ("pod", "data"), "model")

@@ -1,0 +1,81 @@
+"""supervisord semantics: priority startup order, dependency gating,
+restart, status."""
+import pytest
+
+from repro.core.services import Replica, Service, ServiceError
+from repro.core.supervisor import Supervisor
+
+
+def svc(name, priority, deps=()):
+    return Service(name, replicas=[Replica(f"{name}/0", lambda p: p)],
+                   priority=priority, depends_on=deps)
+
+
+def paper_stack():
+    """The paper's §4.3 priority layout."""
+    sup = Supervisor()
+    sup.add(svc("tika", 0))
+    sup.add(svc("bert", 1, deps=("tika",)))
+    for s in ("personal_information", "education", "work_experience",
+              "skills", "functional_area"):
+        sup.add(svc(s, 2, deps=("bert",)))
+    sup.add(svc("cv_parser", 3, deps=("tika", "bert",
+                                      "personal_information", "education",
+                                      "work_experience", "skills",
+                                      "functional_area")))
+    return sup
+
+
+def test_startup_order_respects_priority():
+    sup = paper_stack()
+    order = sup.start_all()
+    assert order[0] == "tika"
+    assert order[1] == "bert"
+    assert order[-1] == "cv_parser"
+    assert set(order[2:7]) == {"personal_information", "education",
+                               "work_experience", "skills",
+                               "functional_area"}
+
+
+def test_dependency_violation_raises():
+    sup = Supervisor()
+    sup.add(svc("cv_parser", 0, deps=("bert",)))   # bert at HIGHER priority
+    sup.add(svc("bert", 1))
+    with pytest.raises(ServiceError, match="priority ordering"):
+        sup.start_all()
+
+
+def test_unknown_dependency_raises():
+    sup = Supervisor()
+    sup.add(svc("a", 0, deps=("ghost",)))
+    with pytest.raises(ServiceError, match="unknown dependency"):
+        sup.start_all()
+
+
+def test_restart_and_status():
+    sup = paper_stack()
+    sup.start_all()
+    sup.restart("bert")
+    st = sup.status()
+    assert st["bert"]["state"] == "RUNNING"
+    assert st["cv_parser"]["priority"] == 3
+    sup.stop_all()
+    assert all(v["state"] == "STOPPED" for v in sup.status().values())
+
+
+def test_flaky_start_retries():
+    attempts = {"n": 0}
+
+    class Flaky(Service):
+        def start(self):
+            attempts["n"] += 1
+            if attempts["n"] < 3:
+                raise RuntimeError("boom")
+            super().start()
+
+    sup = Supervisor(max_restarts=5)
+    sup.add(Flaky("flaky", replicas=[Replica("f/0", lambda p: p)],
+                  priority=0))
+    sup.start_all()
+    assert attempts["n"] == 3
+    assert sup.services["flaky"].started
