@@ -14,6 +14,11 @@ What it stands up, in the paper's startup order (supervisord priorities):
 Then it serves a corpus with concurrent clients, kills a replica mid-run
 to show failover (max_fails/fail_timeout/backup promotion), and prints
 Table-6-style stage statistics and the parallel-vs-sequential comparison.
+
+With ``--lm`` (default on) a slot-native LM PaaS joins the deployment:
+two engine replicas behind a least-loaded balancer, each running the
+mixed-length continuous-batching engine with an SLO-aware scheduler —
+the LM analogue of the paper's per-section NER services.
 """
 from __future__ import annotations
 
@@ -63,12 +68,51 @@ def build_deployment(n_replicas: int, fail_rate: float):
     return sup, parser, services
 
 
+def run_lm_paas(sup: Supervisor) -> None:
+    """Slot-native LM serving as one more PaaS under the supervisor:
+    2 engine replicas, least-loaded upstream, deadline scheduling."""
+    import dataclasses
+
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    from repro.serve.service import make_lm_service
+
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jax.numpy.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(9))
+    svc = make_lm_service("lm_summarizer", model, params, n_replicas=2,
+                          batch_size=2, max_seq=64, policy="deadline",
+                          balancer_policy="least_loaded", with_backup=False,
+                          supervisor=sup, priority=2)
+    svc.start()
+
+    rng = random.Random(11)
+    lat = []
+    for i in range(6):
+        prompt = [rng.randrange(2, cfg.vocab_size)
+                  for _ in range(rng.choice([5, 9, 13]))]
+        out = svc({"prompt": prompt, "max_new_tokens": 4,
+                   "deadline_s": time.perf_counter() + 30.0})
+        lat.append(out["latency_s"])
+    print(f"\nLM PaaS: served 6 mixed-length prompts, "
+          f"p50 {sorted(lat)[3]*1e3:.0f} ms")
+    for rep in svc.replicas:
+        eng = rep.handler.scheduler.engine
+        print(f"  {rep.name}: {eng.metrics}")
+    st = sup.status()["lm_summarizer"]
+    print(f"  supervisor: {st['state']} healthy={st['healthy_replicas']} "
+          f"upstream={st['upstream']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=40)
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--fail-rate", type=float, default=0.08)
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--lm", action=argparse.BooleanOptionalAction,
+                    default=True, help="stand up the LM PaaS stage too")
     args = ap.parse_args()
 
     sup, parser, services = build_deployment(args.replicas, args.fail_rate)
@@ -125,6 +169,9 @@ def main() -> None:
     we = services["work_experience"]
     assert we.balancer.stats["served"] == args.docs + 1, "lost requests"
     print("\nOK — zero lost requests through the outage.")
+
+    if args.lm:
+        run_lm_paas(sup)
 
 
 if __name__ == "__main__":

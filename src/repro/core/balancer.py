@@ -12,6 +12,11 @@ Round-robin over healthy primaries; a primary that fails ``max_fails``
 times inside a ``fail_timeout`` window is benched for ``fail_timeout``
 seconds; the ``backup`` replica only serves while ALL primaries are
 benched/down.
+
+``policy="least_loaded"`` (NGINX ``least_conn`` analogue) routes each
+request to the candidate reporting the smallest ``Replica.load()`` —
+engine-backed LM replicas report queue depth + occupied slots, so long
+generations stop head-of-line-blocking the other replicas.
 """
 from __future__ import annotations
 
@@ -30,7 +35,9 @@ class _ReplicaState:
 
 class RoundRobinBalancer:
     def __init__(self, replicas: list[Replica], *, max_fails: int = 3,
-                 fail_timeout: float = 15.0, clock=time.monotonic):
+                 fail_timeout: float = 15.0, clock=time.monotonic,
+                 policy: str = "rr"):
+        assert policy in ("rr", "least_loaded"), policy
         self.primaries = [r for r in replicas if not r.backup]
         self.backups = [r for r in replicas if r.backup]
         if not self.primaries:
@@ -38,6 +45,7 @@ class RoundRobinBalancer:
         self.max_fails = max_fails
         self.fail_timeout = fail_timeout
         self.clock = clock
+        self.policy = policy
         self._rr = 0
         self._lock = threading.Lock()
         self._state = {id(r): _ReplicaState() for r in replicas}
@@ -74,7 +82,10 @@ class RoundRobinBalancer:
                 cands = self._candidates()
                 if not cands:
                     break
-                r = cands[self._rr % len(cands)]
+                if self.policy == "least_loaded":
+                    r = min(cands, key=lambda c: c.load())
+                else:
+                    r = cands[self._rr % len(cands)]
                 self._rr += 1
             try:
                 out = r(payload, rng)
@@ -94,10 +105,10 @@ class RoundRobinBalancer:
 
 
 def deploy(service, *, max_fails: int = 3, fail_timeout: float = 15.0,
-           clock=time.monotonic):
+           clock=time.monotonic, policy: str = "rr"):
     """Attach an upstream balancer to a Service (paper's single-uri
     upstreaming)."""
     service.balancer = RoundRobinBalancer(
         service.replicas, max_fails=max_fails, fail_timeout=fail_timeout,
-        clock=clock)
+        clock=clock, policy=policy)
     return service

@@ -16,7 +16,14 @@ from typing import Any, Callable
 
 
 class ServiceError(RuntimeError):
-    pass
+    """Replica-side failure: the balancer retries elsewhere and counts it
+    against the replica's health (max_fails benching)."""
+
+
+class RequestError(RuntimeError):
+    """Client-side error (oversized prompt, expired deadline): retrying
+    on another replica cannot help, so it propagates straight to the
+    caller without touching replica health."""
 
 
 @dataclass
@@ -60,6 +67,13 @@ class Replica:
 
     def healthy(self) -> bool:
         return self._up
+
+    def load(self) -> int:
+        """Current load for least-loaded balancing: delegates to the
+        handler (engine-backed LM replicas report queue + active slots);
+        plain handlers report 0 (round-robin ties)."""
+        fn = getattr(self.handler, "load", None)
+        return int(fn()) if callable(fn) else 0
 
     def set_up(self, up: bool) -> None:
         self._up = up

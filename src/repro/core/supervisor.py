@@ -74,12 +74,24 @@ class Supervisor:
             self.events.append(("stopped", svc.name, 0))
 
     def status(self) -> dict:
-        """supervisorctl status analogue."""
-        return {
-            name: {
+        """supervisorctl status analogue, enriched with replica health
+        and upstream (balancer) counters when a service is deployed."""
+        out = {}
+        for name, s in self.services.items():
+            row = {
                 "state": "RUNNING" if s.started else "STOPPED",
                 "priority": s.priority,
                 "replicas": len(s.replicas),
+                "healthy_replicas": sum(1 for r in s.replicas if r.healthy()),
+                "load": sum(r.load() for r in s.replicas),
             }
-            for name, s in self.services.items()
-        }
+            if s.balancer is not None:
+                row["upstream"] = dict(s.balancer.stats)
+            out[name] = row
+        return out
+
+    def unhealthy(self) -> list[str]:
+        """Services with zero healthy replicas — restart candidates."""
+        return [name for name, s in self.services.items()
+                if s.started and s.replicas
+                and not any(r.healthy() for r in s.replicas)]

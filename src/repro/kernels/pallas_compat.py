@@ -1,0 +1,12 @@
+"""Version-compat shims for the Pallas TPU API surface the kernels use.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever this jax ships once, here, so the four kernel modules
+don't each carry (and drift) their own getattr dance.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

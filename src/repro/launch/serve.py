@@ -1,12 +1,13 @@
-"""Serving launcher: batched prefill/decode engine for one architecture.
+"""Serving launcher: slot-native continuous-batching engine for one
+architecture, behind an SLO-aware scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
-        [--requests 6] [--batch 4] [--max-new 8]
+        [--requests 6] [--batch 4] [--max-new 8] [--policy spf]
 
-Serves synthetic token requests through the continuous-batching engine
-(reduced config on CPU). For the multi-model parallel-PaaS serving of the
-paper, see examples/serve_parallel_pipeline.py; for pod-scale serving
-shapes, see repro.launch.dryrun (decode_32k / long_500k).
+Serves synthetic token requests through the mixed-length engine (reduced
+config on CPU). For the multi-model parallel-PaaS serving of the paper,
+see examples/serve_parallel_pipeline.py; for pod-scale serving shapes,
+see repro.launch.dryrun (decode_32k / long_500k).
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import jax
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.scheduler import POLICIES, Scheduler
 
 
 def main() -> None:
@@ -29,6 +31,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--policy", default="fifo", choices=POLICIES)
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request deadline; 0 = no SLO")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
@@ -38,27 +43,46 @@ def main() -> None:
     eng = ServingEngine(model, params, batch_size=args.batch,
                         max_seq=args.max_seq)
 
+    sched = Scheduler(eng, policy=args.policy)
+
+    import time
     rng = jax.random.key(1)
     reqs = []
     for i in range(args.requests):
         rng, k = jax.random.split(rng)
-        prompt = jax.random.randint(k, (args.prompt_len,), 2,
+        # mixed prompt lengths exercise per-slot decode
+        plen = max(2, args.prompt_len - (i % 4) * 2)
+        prompt = jax.random.randint(k, (plen,), 2,
                                     cfg.vocab_size).tolist()
-        reqs.append(Request(rid=i, prompt=prompt,
+        deadline = (time.perf_counter() + args.slo_ms / 1e3
+                    if args.slo_ms else None)
+        reqs.append(Request(rid=i, prompt=prompt, deadline_s=deadline,
                             max_new_tokens=args.max_new))
 
     print(f"serving {args.requests} requests on {args.arch} "
-          f"({cfg.family}, reduced) — engine batch {args.batch}")
-    done = eng.run(reqs)
+          f"({cfg.family}, reduced) — engine batch {args.batch}, "
+          f"policy {args.policy}")
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
     lats = [r.latency_s for r in done]
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"completed {len(done)}; {toks} tokens; "
-          f"latency p50={statistics.median(lats)*1e3:.0f}ms "
-          f"max={max(lats)*1e3:.0f}ms")
+    if lats:
+        print(f"completed {len(done)}; {toks} tokens; "
+              f"latency p50={statistics.median(lats)*1e3:.0f}ms "
+              f"max={max(lats)*1e3:.0f}ms; "
+              f"queue wait mean={sched.stats.mean_queue_wait_s()*1e3:.0f}ms")
+    else:
+        print("completed 0 (all requests shed past their deadline)")
     print(f"engine metrics: {eng.metrics}")
+    if args.slo_ms:
+        print(f"SLO: hits={sched.stats.slo_hits} "
+              f"misses={sched.stats.slo_misses} shed={sched.stats.shed} "
+              f"rejected={sched.stats.rejected}")
     for r in done[:3]:
         print(f"  req {r.rid}: out={r.out_tokens}")
-    assert len(done) == args.requests
+    assert len(done) + sched.stats.shed + sched.stats.rejected \
+        == args.requests
     print("OK")
 
 

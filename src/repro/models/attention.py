@@ -165,8 +165,12 @@ def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
     if mode == "decode":
         # cache_len = number of tokens already cached; the new token goes
         # at index cache_len and attends to indices [0, cache_len].
+        # Scalar cache_len decodes all rows at one length (lock-step);
+        # a (B,) vector gives every slot its own length (mixed-length
+        # continuous batching — each row ropes, writes, and masks at its
+        # own position).
         pos = cache_len if positions is None else positions
-        q, k, v = qkv(x, p, cfg, positions=jnp.reshape(pos, (1, 1)),
+        q, k, v = qkv(x, p, cfg, positions=jnp.reshape(pos, (-1, 1)),
                       mrope_positions=mrope_positions)
         if plan is not None and plan.mesh is not None:
             # Flash-decoding layout (§Perf): the single-token q is tiny —
@@ -179,10 +183,18 @@ def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
                 t, plan.ns(P(b, None, None, None)))
             q, k, v = rep(q), rep(k), rep(v)
         idx = jnp.asarray(cache_len, jnp.int32)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        if idx.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        else:
+            # per-slot write index: scatter row b's K/V at [b, idx[b]]
+            rows = jnp.arange(k.shape[0])
+            k_cache = cache["k"].at[rows, idx].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, idx].set(
+                v[:, 0].astype(cache["v"].dtype))
         o = decode_attention(q, k_cache, v_cache, cache_len + 1,
                              sliding_window=win)
         if plan is not None and plan.mesh is not None:

@@ -189,7 +189,11 @@ class Model:
         return total, {"xent": loss, "aux": aux}
 
     # ---------------- prefill ----------------
-    def prefill(self, params, batch, plan=None):
+    def prefill(self, params, batch, plan=None, *, last_idx=None):
+        """last_idx: optional (B,) int32 — per-row index of the last *real*
+        token when rows are right-padded to a shared bucket length (the
+        serving engine's batched mixed-length admission). None keeps the
+        unpadded behaviour: logits at the final position."""
         cfg = self.cfg
         x, extras, prefix = _build_inputs(params, cfg, batch,
                                           drop_last_token=False)
@@ -198,23 +202,31 @@ class Model:
         x, cache, _ = _run_stack(params, cfg, x, mode="prefill", cache=None,
                                  extras=extras, plan=plan)
         x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        logits = _logits(params, cfg, x[:, -1:, :])
+        if last_idx is None:
+            x_last = x[:, -1:, :]
+        else:
+            idx = jnp.asarray(last_idx, jnp.int32) + prefix
+            x_last = x[jnp.arange(x.shape[0]), idx][:, None, :]
+        logits = _logits(params, cfg, x_last)
         return logits, cache
 
     # ---------------- decode ----------------
     def decode_step(self, params, token, cache, cache_len, plan=None):
-        """token (B,1) int32; cache_len = existing token count; the new
-        token is written at index cache_len."""
+        """token (B,1) int32; cache_len = existing token count — a scalar
+        (all rows at one length) or a (B,) vector (per-slot lengths for
+        mixed-length continuous batching); the new token is written at
+        index cache_len (per row when a vector)."""
         cfg = self.cfg
+        B = token.shape[0]
         x = _embed_tokens(params, cfg, token)
         extras = {"cache_len": cache_len}
         if cfg.rope == "learned":
             x = x + layers.sinusoidal_pos(
-                jnp.reshape(cache_len, (1, 1)), cfg.d_model, x.dtype)
+                jnp.reshape(cache_len, (-1, 1)), cfg.d_model, x.dtype)
         if cfg.rope == "mrope":
-            pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32),
-                                   (token.shape[0], 3, 1))
-            extras["mrope_positions"] = pos
+            pos = jnp.reshape(jnp.broadcast_to(
+                jnp.asarray(cache_len, jnp.int32), (B,)), (B, 1, 1))
+            extras["mrope_positions"] = jnp.broadcast_to(pos, (B, 3, 1))
         if plan is not None:
             x = plan.constrain_act(x)
         x, new_cache, _ = _run_stack(params, cfg, x, mode="decode",

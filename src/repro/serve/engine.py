@@ -1,11 +1,34 @@
-"""Serving engine: KV-cache lifecycle + batched prefill/decode for one
-model, and a request scheduler that batches concurrent requests (the
-substrate under every PaaS replica when the payload is an LM).
+"""Slot-native serving engine: device-resident KV cache, batched
+prefill admission, and mixed-length continuous-batching decode for one
+model (the substrate under every PaaS replica when the payload is an LM).
 
 The engine slots requests into a fixed-capacity batch (contiguous KV
-cache, one slot per sequence), prefills new requests, then decodes all
-active slots in lock-step — continuous-batching-lite, matching the
-paper's near-real-time serving target rather than max-throughput.
+cache, one slot per sequence). Three properties distinguish it from the
+lock-step predecessor:
+
+* **Device-side admission** — prefill writes the new sequence's KV into
+  its slot with ``jax.lax.dynamic_update_slice`` inside one jitted
+  function (cache buffers donated); the full cache never round-trips
+  through host numpy. Several waiting requests prefill as one batch.
+* **Mixed-length decode** — every slot keeps its own length; one decode
+  step ropes, writes, and masks each row at its own position, so slots
+  at different depths decode together bit-exactly for dense/recurrent
+  families (no padding to the longest active slot). MoE is the one
+  caveat: capacity-bounded expert routing shares its per-expert slot
+  budget across the co-batched rows, so under expert overflow an MoE
+  decode step can drop a token's expert contribution that solo serving
+  would keep — inherent to capacity routing, and the reason MoE
+  admission prefills one row at a time (see below).
+* **Slot recycling mid-flight** — EOS/stop-token early exit frees a slot
+  the moment its request finishes; the next waiting request is admitted
+  into it while the other slots keep decoding.
+
+Prompts for pure-attention caches (keys ``{k, v}``) are right-padded to
+power-of-two buckets so admission compiles O(B x log max_seq) variants,
+not one per prompt length; pad positions are never attended (per-slot
+length masks them) and are overwritten as decode advances. Recurrent
+caches (rwkv / hybrid SSM state) cannot absorb pad tokens, so those
+group by exact prompt length instead.
 """
 from __future__ import annotations
 
@@ -16,12 +39,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+_MIN_BUCKET = 8
+
 
 @dataclass
 class Request:
     rid: int
     prompt: list                    # token ids
     max_new_tokens: int = 8
+    stop_tokens: tuple = ()         # EOS ids -> early exit
+    priority: int = 0               # scheduler tier (higher = more urgent)
+    deadline_s: float | None = None  # absolute perf_counter SLO deadline
     out_tokens: list = field(default_factory=list)
     submitted_s: float = field(default_factory=time.perf_counter)
     done_s: float | None = None
@@ -30,99 +58,197 @@ class Request:
     def latency_s(self) -> float:
         return (self.done_s or time.perf_counter()) - self.submitted_s
 
+    @property
+    def finished_by_stop(self) -> bool:
+        return bool(self.out_tokens) and self.out_tokens[-1] in self.stop_tokens
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
 
 class ServingEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
-                 max_seq: int = 256, plan=None, greedy: bool = True):
+                 max_seq: int = 256, plan=None):
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.plan = plan
-        cfg = model.cfg
         self.caches = model.init_cache(batch_size, max_seq)
+        # MoE routing flattens the whole (rows x tokens) block into one
+        # shared per-expert capacity, so pad tokens / co-batched rows can
+        # displace real tokens from dispatch — prefill those one row at a
+        # time, exact length, to keep admission bit-exact with solo serving.
+        is_moe = bool(getattr(model.cfg, "n_experts", 0))
+        # pure-attention caches tolerate right-padded prompts (pad KV is
+        # masked, then overwritten); recurrent state does not.
+        self._paddable = set(self.caches) <= {"k", "v"} and not is_moe
+        self._solo_prefill = is_moe
         self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
         self.slot_req: list = [None] * batch_size
-        # jitted single-slot prefill (B=1) and batched decode
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, plan))
-        self._decode = jax.jit(
-            lambda p, t, c, l: model.decode_step(p, t, c, l, plan))
-        self.metrics = {"prefills": 0, "decode_steps": 0, "completed": 0}
+        self._finished_at_admit: list = []
+        self._used_slots: set = set()
+
+        def admit(p, caches, tokens, last_idx, slots):
+            """Batched prefill + device-side slot insertion.
+
+            tokens (k, S) right-padded prompts, last_idx (k,) index of each
+            row's final real token, slots (k,) destination slot per row.
+            Returns (first generated token per row, updated caches).
+            """
+            logits, pref = model.prefill(p, {"tokens": tokens}, plan,
+                                         last_idx=last_idx)
+            for j in range(tokens.shape[0]):
+                for key in caches:
+                    row = jax.lax.dynamic_slice_in_dim(pref[key], j, 1, axis=1)
+                    start = (jnp.int32(0), slots[j]) + \
+                        (jnp.int32(0),) * (row.ndim - 2)
+                    caches[key] = jax.lax.dynamic_update_slice(
+                        caches[key], row.astype(caches[key].dtype), start)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        def decode(p, tok, caches, lengths):
+            logits, caches = model.decode_step(p, tok, caches, lengths, plan)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        self._admit = jax.jit(admit, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+        self.metrics = {"prefills": 0, "prefill_batches": 0,
+                        "decode_steps": 0, "completed": 0,
+                        "stop_token_exits": 0, "slot_reuses": 0}
 
     # ------------------------------------------------------------- slots
-    def _free_slot(self) -> int | None:
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                return i
-        return None
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _free_slot(self) -> int | None:
+        free = self.free_slots()
+        return free[0] if free else None
+
+    @property
+    def active(self) -> int:
+        return self.B - len(self.free_slots())
+
+    def load(self) -> int:
+        """Occupied slots — consumed by least-loaded balancing."""
+        return self.active
+
+    # --------------------------------------------------------- admission
     def add_request(self, req: Request) -> bool:
         """Prefill into a free slot; False if engine is full."""
-        slot = self._free_slot()
-        if slot is None:
-            return False
-        P = len(req.prompt)
-        toks = jnp.asarray([req.prompt], jnp.int32)
-        logits, cache = self._prefill(self.params, {"tokens": toks})
-        # write the prefill cache into the slot (host-side copy; fine at
-        # example scale — the dry-run path never goes through here)
-        for key in self.caches:
-            c = np.array(self.caches[key])          # writable host copy
-            pref = np.asarray(cache[key])
-            if c.ndim >= 3 and pref.ndim == c.ndim and \
-                    c.shape[2] == self.max_seq and pref.shape[2] <= self.max_seq:
-                c[:, slot] = 0
-                c[:, slot, :pref.shape[2]] = pref[:, 0]
-            else:  # state-style caches (L, B, ...)
-                c[:, slot] = pref[:, 0]
-            self.caches[key] = jnp.asarray(c)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(nxt)
-        self.slot_req[slot] = req
-        self.slot_len[slot] = P
-        self.metrics["prefills"] += 1
-        return True
+        return self.add_requests([req]) == 1
+
+    def add_requests(self, reqs: list) -> int:
+        """Admit as many of ``reqs`` (in order) as there are free slots,
+        prefilling each shape-compatible group as ONE batched call whose
+        slot insertion happens on device. Returns #admitted."""
+        for r in reqs:
+            if len(r.prompt) > self.max_seq:
+                raise ValueError(f"request {r.rid}: prompt length "
+                                 f"{len(r.prompt)} > max_seq {self.max_seq}")
+        free = self.free_slots()
+        take = reqs[:len(free)]
+        if not take:
+            return 0
+        groups: dict = {}
+        for n, (req, slot) in enumerate(zip(take, free)):
+            P = len(req.prompt)
+            if self._solo_prefill:
+                key = (n,)                       # one row per prefill call
+            elif self._paddable:
+                key = _bucket(P, self.max_seq)
+            else:
+                key = P                          # exact-length co-batching
+            groups.setdefault(key, []).append((req, slot))
+        for key, members in groups.items():
+            width = key if isinstance(key, int) \
+                else len(members[0][0].prompt)
+            toks = np.zeros((len(members), width), np.int32)
+            last = np.zeros(len(members), np.int32)
+            slots = np.zeros(len(members), np.int32)
+            for j, (req, slot) in enumerate(members):
+                P = len(req.prompt)
+                toks[j, :P] = req.prompt
+                last[j] = P - 1
+                slots[j] = slot
+            nxt, self.caches = self._admit(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(last), jnp.asarray(slots))
+            nxt = np.asarray(nxt)
+            for j, (req, slot) in enumerate(members):
+                req.out_tokens.append(int(nxt[j]))
+                if slot in self._used_slots:
+                    self.metrics["slot_reuses"] += 1
+                self._used_slots.add(slot)
+                self.slot_req[slot] = req
+                self.slot_len[slot] = len(req.prompt)
+                self.metrics["prefills"] += 1
+                if self._is_done(req):
+                    self._retire(slot)
+                    self._finished_at_admit.append(req)
+            self.metrics["prefill_batches"] += 1
+        return len(take)
 
     # ------------------------------------------------------------- decode
+    def _is_done(self, req: Request) -> bool:
+        return (len(req.out_tokens) >= req.max_new_tokens
+                or req.finished_by_stop)
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done_s = time.perf_counter()
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self.metrics["completed"] += 1
+        if req.finished_by_stop and len(req.out_tokens) < req.max_new_tokens:
+            self.metrics["stop_token_exits"] += 1
+
     def step(self) -> list:
-        """One lock-step decode over all active slots. Returns finished
-        requests."""
+        """One decode step over all active slots (each at its own length).
+        Returns finished requests."""
+        finished, self._finished_at_admit = self._finished_at_admit, []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return []
-        if len(set(self.slot_len[i] for i in active)) == 1:
-            cache_len = jnp.int32(int(self.slot_len[active[0]]))
-        else:
-            # lock-step engine: pad to the longest (masking handles shorter)
-            cache_len = jnp.int32(int(max(self.slot_len[i] for i in active)))
+            return finished
+        # any slot past capacity would write out of bounds — finish it now
+        for i in list(active):
+            if self.slot_len[i] >= self.max_seq:
+                finished.append(self.slot_req[i])
+                self._retire(i)
+                active.remove(i)
+        if not active:
+            return finished
         tok = np.zeros((self.B, 1), np.int32)
         for i in active:
             tok[i, 0] = self.slot_req[i].out_tokens[-1]
-        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
-                                           self.caches, cache_len)
+        nxt, self.caches = self._decode(self.params, jnp.asarray(tok),
+                                        self.caches,
+                                        jnp.asarray(self.slot_len))
         self.metrics["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-        finished = []
+        nxt = np.asarray(nxt)
         for i in active:
             r = self.slot_req[i]
             r.out_tokens.append(int(nxt[i]))
             self.slot_len[i] += 1
-            if len(r.out_tokens) >= r.max_new_tokens:
-                r.done_s = time.perf_counter()
+            if self._is_done(r):
                 finished.append(r)
-                self.slot_req[i] = None
-                self.slot_len[i] = 0
-                self.metrics["completed"] += 1
+                self._retire(i)
         return finished
 
     # ------------------------------------------------------------- run
     def run(self, requests: list) -> list:
-        """Serve a list of requests to completion (batched)."""
+        """Serve a list of requests to completion (batched, slots recycled
+        as soon as they free up)."""
         pending = list(requests)
         done: list = []
-        while pending or any(r is not None for r in self.slot_req):
-            while pending and self.add_request(pending[0]):
-                pending.pop(0)
+        while pending or self.active or self._finished_at_admit:
+            n = self.add_requests(pending)
+            del pending[:n]
             done.extend(self.step())
         return done

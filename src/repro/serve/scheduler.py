@@ -1,13 +1,26 @@
 """Request scheduler in front of the ServingEngine: admission queue,
-continuous batching, and per-request SLO tracking.
+continuous batching, SLO-aware policies, and per-request stats.
 
 The paper's front-end (NGINX + parser PaaS) admits requests at arbitrary
 concurrency and the deployment's worker slots queue the excess
 (bench_concurrency reproduces that). This module is the LM analogue for
 a single model service: requests arrive asynchronously, the scheduler
-fills free engine slots in arrival order (FIFO) or shortest-prompt-first
-(SPF — reduces head-of-line blocking from long prefills), and every
-decode tick serves all active slots (continuous batching).
+fills free engine slots by policy, and every decode tick serves all
+active slots (continuous batching).
+
+Policies:
+    fifo      arrival order
+    spf       shortest-prompt-first (reduces head-of-line blocking from
+              long prefills)
+    priority  highest ``Request.priority`` tier first, FIFO within a tier
+    deadline  earliest ``Request.deadline_s`` first (EDF); requests whose
+              deadline has already passed are shed at dequeue time rather
+              than burning slots on work nobody can use
+
+With ``max_queue`` set, submission is bounded (NGINX worker-queue
+semantics: excess requests are rejected, counted in ``stats.rejected``);
+``deadline`` additionally rejects at submit time any request that is
+already past its deadline.
 """
 from __future__ import annotations
 
@@ -17,16 +30,22 @@ from dataclasses import dataclass, field
 
 from repro.serve.engine import Request, ServingEngine
 
+POLICIES = ("fifo", "spf", "priority", "deadline")
+
 
 @dataclass
 class SchedulerStats:
     admitted: int = 0
     completed: int = 0
     rejected: int = 0
+    shed: int = 0                   # expired deadlines dropped pre-prefill
     ticks: int = 0
     queue_peak: int = 0
+    slo_hits: int = 0
+    slo_misses: int = 0
     latencies_s: list = field(default_factory=list)
     queue_wait_s: list = field(default_factory=list)
+    completed_by_priority: dict = field(default_factory=dict)
 
     def percentile(self, q: float) -> float:
         if not self.latencies_s:
@@ -34,23 +53,38 @@ class SchedulerStats:
         xs = sorted(self.latencies_s)
         return xs[min(int(q * len(xs)), len(xs) - 1)]
 
+    def mean_queue_wait_s(self) -> float:
+        if not self.queue_wait_s:
+            return 0.0
+        return sum(self.queue_wait_s) / len(self.queue_wait_s)
+
 
 class Scheduler:
     """Admission + slot-filling policy over a ServingEngine."""
 
     def __init__(self, engine: ServingEngine, *, policy: str = "fifo",
                  max_queue: int = 0):
-        assert policy in ("fifo", "spf")
+        assert policy in POLICIES, policy
         self.engine = engine
         self.policy = policy
         self.max_queue = max_queue            # 0 = unbounded
         self.queue: deque = deque()
         self.stats = SchedulerStats()
         self._enq_t: dict[int, float] = {}
+        self.shed_requests: list = []
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> bool:
+        if len(req.prompt) > self.engine.max_seq:
+            # unservable: would raise from the engine mid-batch at tick
+            # time and take its co-dequeued batchmates down with it
+            self.stats.rejected += 1
+            return False
         if self.max_queue and len(self.queue) >= self.max_queue:
+            self.stats.rejected += 1
+            return False
+        if self.policy == "deadline" and req.deadline_s is not None \
+                and req.deadline_s <= time.perf_counter():
             self.stats.rejected += 1
             return False
         self.queue.append(req)
@@ -59,33 +93,68 @@ class Scheduler:
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
         return True
 
+    # ------------------------------------------------------------ policy
     def _next_index(self) -> int:
         if self.policy == "spf":
             return min(range(len(self.queue)),
                        key=lambda i: len(self.queue[i].prompt))
+        if self.policy == "priority":
+            # max priority; ties resolved FIFO by queue position
+            return max(range(len(self.queue)),
+                       key=lambda i: (self.queue[i].priority,
+                                      -i))
+        if self.policy == "deadline":
+            inf = float("inf")
+            return min(range(len(self.queue)),
+                       key=lambda i: (self.queue[i].deadline_s
+                                      if self.queue[i].deadline_s is not None
+                                      else inf))
         return 0
+
+    def _shed(self, req: Request) -> None:
+        req.done_s = time.perf_counter()
+        self._enq_t.pop(req.rid, None)
+        self.stats.shed += 1
+        self.shed_requests.append(req)
 
     # ------------------------------------------------------------ serving
     def tick(self) -> list:
-        """Fill free slots, run one decode step. Returns finished reqs."""
-        while self.queue:
+        """Fill free slots (one batched prefill), run one decode step.
+        Returns finished requests."""
+        batch = []
+        while self.queue and len(batch) < len(self.engine.free_slots()):
             i = self._next_index()
             req = self.queue[i]
-            if not self.engine.add_request(req):
-                break                          # engine full
             del self.queue[i]
-            self.stats.queue_wait_s.append(
-                time.perf_counter() - self._enq_t.pop(req.rid))
+            if self.policy == "deadline" and req.deadline_s is not None \
+                    and req.deadline_s <= time.perf_counter():
+                self._shed(req)
+                continue
+            batch.append(req)
+        if batch:
+            admitted = self.engine.add_requests(batch)
+            assert admitted == len(batch)
+            now = time.perf_counter()
+            for req in batch:
+                self.stats.queue_wait_s.append(now - self._enq_t.pop(req.rid))
         done = self.engine.step()
         self.stats.ticks += 1
         for r in done:
             self.stats.completed += 1
             self.stats.latencies_s.append(r.latency_s)
+            tier = self.stats.completed_by_priority
+            tier[r.priority] = tier.get(r.priority, 0) + 1
+            if r.deadline_s is not None:
+                if r.done_s <= r.deadline_s:
+                    self.stats.slo_hits += 1
+                else:
+                    self.stats.slo_misses += 1
         return done
 
     def drain(self) -> list:
         """Run until queue and engine are empty."""
         out = []
-        while self.queue or any(r is not None for r in self.engine.slot_req):
+        while self.queue or self.engine.active \
+                or self.engine._finished_at_admit:
             out.extend(self.tick())
         return out

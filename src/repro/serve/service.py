@@ -1,0 +1,96 @@
+"""Wire a ServingEngine + Scheduler into the paper's PaaS fabric.
+
+A language model becomes one more Prediction-as-a-Service endpoint: N
+engine-backed replicas behind the NGINX-style balancer, started by the
+supervisor in priority order next to Tika/BERT/NER services. Each
+replica owns its own slot-native engine (own KV cache), so replicas
+scale serving capacity the same way the paper scales section parsers
+across machines.
+
+Payloads are ``{"prompt": [...], "max_new_tokens": n, ...}`` dicts;
+the reply carries the generated tokens plus per-request latency so the
+front-end can report Table-6-style stage timings.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.balancer import deploy
+from repro.core.services import (Replica, RequestError, Service,
+                                 ServiceError)
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.scheduler import Scheduler
+
+
+@dataclass
+class LMReplica:
+    """One engine-backed deployment of an LM service.
+
+    The handler is synchronous (submit + drain) to match the in-process
+    transport of the other PaaS replicas; ``load()`` exposes queue depth
+    + occupied slots so the balancer can route least-loaded.
+    """
+    name: str
+    scheduler: Scheduler
+    _rid: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def load(self) -> int:
+        return len(self.scheduler.queue) + self.scheduler.engine.active
+
+    def __call__(self, payload: dict) -> dict:
+        with self._lock:                   # one engine = one decode stream
+            self._rid += 1
+            req = Request(rid=self._rid, prompt=list(payload["prompt"]),
+                          max_new_tokens=payload.get("max_new_tokens", 8),
+                          stop_tokens=tuple(payload.get("stop_tokens", ())),
+                          priority=payload.get("priority", 0),
+                          deadline_s=payload.get("deadline_s"))
+            # client errors: no other replica can serve these either, so
+            # they must NOT look like replica failures to the balancer
+            if len(req.prompt) > self.scheduler.engine.max_seq:
+                raise RequestError(f"{self.name}: prompt length "
+                                   f"{len(req.prompt)} > max_seq "
+                                   f"{self.scheduler.engine.max_seq}")
+            if req.deadline_s is not None \
+                    and req.deadline_s <= time.perf_counter():
+                raise RequestError(f"{self.name}: deadline already expired")
+            if not self.scheduler.submit(req):
+                # queue full — backpressure; another replica may have room
+                raise ServiceError(f"{self.name}: queue full")
+            done = self.scheduler.drain()
+            hit = [d for d in done if d.rid == req.rid]
+            if not hit:                    # shed after admission (deadline)
+                raise RequestError(f"{self.name}: request {req.rid} shed "
+                                   f"past its deadline")
+            return {"tokens": hit[0].out_tokens, "latency_s": hit[0].latency_s,
+                    "replica": self.name}
+
+
+def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
+                    batch_size: int = 4, max_seq: int = 128,
+                    policy: str = "fifo", max_queue: int = 0,
+                    priority: int = 2, depends_on: tuple = (),
+                    supervisor: Any = None, balancer_policy: str = "rr",
+                    with_backup: bool = True, plan=None) -> Service:
+    """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
+    optionally registered with a Supervisor (started in priority order)."""
+    replicas = []
+    for i in range(n_replicas):
+        eng = ServingEngine(model, params, batch_size=batch_size,
+                            max_seq=max_seq, plan=plan)
+        sched = Scheduler(eng, policy=policy, max_queue=max_queue)
+        lm = LMReplica(f"{name}/{i}", sched)
+        replicas.append(Replica(f"{name}/{i}", lm,
+                                backup=(with_backup and i == n_replicas - 1
+                                        and n_replicas > 1)))
+    svc = Service(name, replicas=replicas, priority=priority,
+                  depends_on=depends_on)
+    deploy(svc, policy=balancer_policy)
+    if supervisor is not None:
+        supervisor.add(svc)
+    return svc

@@ -1,0 +1,149 @@
+"""Minimal stand-in for ``hypothesis`` so the property-test modules stay
+runnable (and meaningful) in environments without the dependency.
+
+Implements exactly the surface this suite uses — ``given`` (positional
+and keyword strategies, mixed with pytest fixtures), ``settings``
+(``max_examples``; ``deadline`` ignored), and the ``strategies`` used in
+the tests (integers, floats, booleans, lists, tuples, dictionaries,
+text, sampled_from, composite). Draws are pseudo-random but seeded per
+test name, so runs are deterministic; there is no shrinking. Install
+``hypothesis`` (see requirements-dev.txt) for the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _as_strategy(obj) -> Strategy:
+    if not isinstance(obj, Strategy):
+        raise TypeError(f"expected a strategy, got {obj!r}")
+    return obj
+
+
+# ------------------------------------------------------------- strategies
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+           allow_infinity=False, width=64):
+    return Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda r: r.choice(seq))
+
+
+def lists(elements, min_size=0, max_size=10):
+    elements = _as_strategy(elements)
+
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return Strategy(draw)
+
+
+def tuples(*strategies_):
+    strategies_ = [_as_strategy(s) for s in strategies_]
+    return Strategy(lambda r: tuple(s.draw(r) for s in strategies_))
+
+
+def text(alphabet="abcdefghij", min_size=0, max_size=10):
+    chars = list(alphabet)
+
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return "".join(r.choice(chars) for _ in range(n))
+    return Strategy(draw)
+
+
+def dictionaries(keys, values, min_size=0, max_size=10):
+    keys, values = _as_strategy(keys), _as_strategy(values)
+
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        out = {}
+        attempts = 0
+        while len(out) < n and attempts < 20 * (n + 1):
+            out[keys.draw(r)] = values.draw(r)
+            attempts += 1
+        return out
+    return Strategy(draw)
+
+
+def composite(fn):
+    """``fn(draw, *args, **kwargs)`` -> callable returning a Strategy."""
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        return Strategy(lambda r: fn(lambda s: _as_strategy(s).draw(r),
+                                     *args, **kwargs))
+    return factory
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, lists=lists, tuples=tuples, text=text,
+    dictionaries=dictionaries, composite=composite)
+
+
+# -------------------------------------------------------------- decorators
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    pos_strategies = [_as_strategy(s) for s in pos_strategies]
+    kw_strategies = {k: _as_strategy(s) for k, s in kw_strategies.items()}
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # keyword strategies bind by name; positional strategies bind the
+        # RIGHTMOST remaining parameters (hypothesis semantics) — anything
+        # left over is a pytest fixture and stays in the wrapper signature.
+        remaining = [p for p in params if p.name not in kw_strategies]
+        n_pos = len(pos_strategies)
+        if n_pos:
+            drawn_names = [p.name for p in remaining[-n_pos:]]
+            fixtures = remaining[:-n_pos]
+        else:
+            drawn_names = []
+            fixtures = remaining
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, pos_strategies)}
+                drawn.update({k: s.draw(rng)
+                              for k, s in kw_strategies.items()})
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=fixtures)
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """AHP: reproduction of the paper's Tables 3-5 + algebraic properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import ahp
 

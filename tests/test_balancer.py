@@ -83,3 +83,36 @@ def test_max_fails_window_semantics():
         lb._record_failure(a)
         clock.t += 20.0        # each failure expires before the next
     assert st.benched_until <= clock.t   # never benched
+
+
+# ------------------------------------------------------------ least-loaded
+class _LoadedHandler:
+    def __init__(self, load):
+        self._load = load
+        self.calls = 0
+
+    def load(self):
+        return self._load
+
+    def __call__(self, payload):
+        self.calls += 1
+        return payload
+
+
+def test_least_loaded_routes_to_idlest_replica():
+    busy, idle = _LoadedHandler(5), _LoadedHandler(0)
+    reps = [Replica("busy", busy), Replica("idle", idle)]
+    lb = RoundRobinBalancer(reps, policy="least_loaded")
+    for i in range(8):
+        lb(i)
+    assert idle.calls == 8 and busy.calls == 0
+
+
+def test_least_loaded_falls_back_on_plain_handlers():
+    """Handlers without load() report 0 -> stable first-candidate pick,
+    still correct (no crash, no lost request)."""
+    reps = [mk("a"), mk("b")]
+    lb = RoundRobinBalancer(reps, policy="least_loaded")
+    for i in range(6):
+        assert lb(i)[1] == i
+    assert reps[0].calls + reps[1].calls == 6

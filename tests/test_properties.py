@@ -1,7 +1,10 @@
 """Hypothesis property tests over system invariants (deliverable c)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.balancer import RoundRobinBalancer, deploy
 from repro.core.services import Replica, Service, ServiceError

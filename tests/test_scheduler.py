@@ -1,5 +1,7 @@
-"""Scheduler: admission, continuous batching, SPF vs FIFO, bounded queue."""
+"""Scheduler: admission, continuous batching, SPF vs FIFO, bounded queue,
+priority tiers, deadline (EDF) shedding, queue-wait stats."""
 import dataclasses
+import time
 
 import jax
 import pytest
@@ -69,3 +71,126 @@ def test_spf_prefers_short_prompts(engine_factory):
             order.append(r.rid)
     assert order[0] == 1                    # shortest (len 4) served first
     assert s.stats.completed == 3
+
+
+def test_spf_beats_fifo_on_head_of_line_blocking(engine_factory):
+    """With one slot and a long prompt at the head, SPF completes the
+    short requests in strictly fewer ticks than they'd wait under FIFO."""
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="spf")
+    reqs = _reqs(cfg, [48, 4, 4, 4], max_new=2)
+    for r in reqs:
+        s.submit(r)
+    done = s.drain()
+    # the long rid-0 prompt finishes LAST under SPF
+    assert [r.rid for r in done][-1] == 0
+    # and every short request waited fewer ticks than the long one ran
+    assert s.stats.completed == 4
+
+
+def test_queue_wait_stats_recorded(engine_factory):
+    eng, cfg = engine_factory(batch=2)
+    s = Scheduler(eng)
+    for r in _reqs(cfg, [8] * 5):
+        s.submit(r)
+    s.drain()
+    assert len(s.stats.queue_wait_s) == 5
+    assert all(w >= 0 for w in s.stats.queue_wait_s)
+    assert s.stats.mean_queue_wait_s() >= 0
+    # requests 3 and 4 queued behind a full engine: they waited longer
+    # than the first pair, which was admitted on the first tick
+    first_two = sorted(s.stats.queue_wait_s)[:2]
+    last_two = sorted(s.stats.queue_wait_s)[-2:]
+    assert max(first_two) <= min(last_two)
+
+
+def test_bounded_queue_rejection_counting(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, max_queue=3)
+    reqs = _reqs(cfg, [8] * 6, max_new=2)
+    outcomes = [s.submit(r) for r in reqs]
+    assert outcomes == [True] * 3 + [False] * 3
+    assert s.stats.rejected == 3
+    s.drain()
+    assert s.stats.completed == 3
+
+
+def test_oversized_prompt_rejected_at_submit(engine_factory):
+    """Prompt > max_seq can never be served: reject up front instead of
+    blowing up a co-dequeued batch inside tick()."""
+    eng, cfg = engine_factory(batch=2, max_seq=16)
+    s = Scheduler(eng)
+    ok, big = _reqs(cfg, [8], max_new=2)[0], Request(
+        rid=99, prompt=[3] * 50, max_new_tokens=2)
+    assert not s.submit(big)
+    assert s.stats.rejected == 1
+    assert s.submit(ok)
+    done = s.drain()
+    assert [r.rid for r in done] == [ok.rid]   # batchmate unharmed
+
+
+# ------------------------------------------------------------- priority
+def test_priority_tiers_served_first(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="priority")
+    reqs = _reqs(cfg, [8, 8, 8, 8], max_new=2)
+    reqs[2].priority = 5                     # late submitter, high tier
+    reqs[3].priority = 5
+    for r in reqs:
+        s.submit(r)
+    done = s.drain()
+    assert [r.rid for r in done] == [2, 3, 0, 1]   # tier first, FIFO inside
+    assert s.stats.completed_by_priority == {5: 2, 0: 2}
+
+
+# ------------------------------------------------------------- deadline
+def test_deadline_policy_serves_edf_order(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="deadline")
+    reqs = _reqs(cfg, [8, 8, 8], max_new=2)
+    now = time.perf_counter()
+    reqs[0].deadline_s = now + 500.0
+    reqs[1].deadline_s = now + 100.0         # tightest -> first
+    reqs[2].deadline_s = None                # no SLO -> last
+    for r in reqs:
+        s.submit(r)
+    done = s.drain()
+    assert [r.rid for r in done] == [1, 0, 2]
+    assert s.stats.slo_hits == 2             # generous deadlines were met
+    assert s.stats.slo_misses == 0
+
+
+def test_deadline_sheds_expired_requests(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="deadline")
+    live, doomed = _reqs(cfg, [8, 8], max_new=2)
+    live.deadline_s = time.perf_counter() + 500.0
+    s.submit(live)
+    s.submit(doomed)
+    doomed.deadline_s = time.perf_counter() - 1.0   # expires in the queue
+    done = s.drain()
+    assert [r.rid for r in done] == [live.rid]
+    assert s.stats.shed == 1
+    assert s.shed_requests == [doomed]
+    assert s.stats.completed == 1
+
+
+def test_deadline_rejects_expired_at_submit(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="deadline")
+    (dead,) = _reqs(cfg, [8], max_new=2)
+    dead.deadline_s = time.perf_counter() - 1.0
+    assert not s.submit(dead)
+    assert s.stats.rejected == 1
+    assert not s.queue
+
+
+def test_slo_miss_counted(engine_factory):
+    eng, cfg = engine_factory(batch=1)
+    s = Scheduler(eng, policy="fifo")        # fifo still tracks SLO stats
+    (req,) = _reqs(cfg, [8], max_new=2)
+    req.deadline_s = time.perf_counter() + 1e-9    # unmeetable
+    s.submit(req)
+    s.drain()
+    assert s.stats.slo_misses == 1
+    assert s.stats.slo_hits == 0

@@ -1,0 +1,107 @@
+"""LM PaaS wiring: engine replicas behind the balancer/supervisor,
+ServiceError semantics for rejection and shedding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.services import RequestError, ServiceError
+from repro.core.supervisor import Supervisor
+from repro.models.model import build_model
+from repro.serve.service import LMReplica, make_lm_service
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_lm_service_serves_through_balancer_and_supervisor(stack):
+    cfg, model, params = stack
+    sup = Supervisor()
+    svc = make_lm_service("lm", model, params, n_replicas=2, batch_size=2,
+                          max_seq=64, balancer_policy="least_loaded",
+                          with_backup=False, supervisor=sup)
+    sup.start_all()
+    out = svc({"prompt": [5, 6, 7], "max_new_tokens": 3})
+    assert len(out["tokens"]) == 3
+    assert out["replica"].startswith("lm/")
+    st = sup.status()["lm"]
+    assert st["healthy_replicas"] == 2
+    assert st["upstream"]["served"] == 1
+
+
+def test_lm_replica_client_errors_are_request_errors(stack):
+    """Oversized prompts / expired deadlines are the CLIENT's fault —
+    raised as RequestError so the balancer neither retries them nor
+    counts them against replica health."""
+    cfg, model, params = stack
+    svc = make_lm_service("lm", model, params, n_replicas=1, batch_size=1,
+                          max_seq=16)
+    svc.start()
+    rep = svc.replicas[0].handler
+    with pytest.raises(RequestError, match="max_seq"):
+        rep({"prompt": [3] * 50})
+    with pytest.raises(RequestError, match="expired"):
+        rep({"prompt": [3, 4], "deadline_s": 0.0})
+
+
+def test_client_error_does_not_poison_balancer(stack):
+    """One unservable request must not bench healthy replicas: before the
+    RequestError split, the balancer retried it max_fails times on EVERY
+    replica and took the whole service dark."""
+    cfg, model, params = stack
+    svc = make_lm_service("lm", model, params, n_replicas=2, batch_size=1,
+                          max_seq=16, with_backup=False)
+    svc.start()
+    with pytest.raises(RequestError):
+        svc({"prompt": [3] * 50})            # through the balancer
+    assert svc.balancer.stats["failovers"] == 0
+    out = svc({"prompt": [5, 6, 7], "max_new_tokens": 2})
+    assert len(out["tokens"]) == 2           # service still healthy
+
+
+def test_lm_replica_shed_is_request_error(stack):
+    """A request shed between admission and completion surfaces as
+    RequestError (not retryable, not an unpack crash)."""
+    cfg, model, params = stack
+    svc = make_lm_service("lm", model, params, n_replicas=1, batch_size=1,
+                          max_seq=64, policy="deadline")
+    svc.start()
+    rep = svc.replicas[0].handler
+    rep.scheduler.submit = lambda r: True    # force past admission
+    rep.scheduler.drain = lambda: []         # ...and simulate the shed
+    with pytest.raises(RequestError, match="shed"):
+        rep({"prompt": [3, 4, 5], "deadline_s": 1e12})
+
+
+def test_lm_replica_queue_full_is_service_error(stack):
+    """Queue-full IS retryable backpressure — another replica may have
+    room, so it stays a ServiceError."""
+    cfg, model, params = stack
+    svc = make_lm_service("lm", model, params, n_replicas=1, batch_size=1,
+                          max_seq=64, max_queue=1)
+    svc.start()
+    rep = svc.replicas[0].handler
+    rep.scheduler.submit = lambda r: False   # simulate a full queue
+    with pytest.raises(ServiceError, match="queue full"):
+        rep({"prompt": [3, 4, 5]})
+
+
+def test_lm_replica_load_reports_queue_and_slots(stack):
+    cfg, model, params = stack
+    svc = make_lm_service("lm", model, params, n_replicas=1, batch_size=2,
+                          max_seq=64)
+    rep: LMReplica = svc.replicas[0].handler
+    assert rep.load() == 0
+    from repro.serve.engine import Request
+    rep.scheduler.engine.add_request(Request(rid=1, prompt=[4, 5, 6]))
+    rep.scheduler.submit(Request(rid=2, prompt=[4, 5]))
+    rep.scheduler.submit(Request(rid=3, prompt=[4, 5]))
+    assert rep.load() == 3                   # 1 active slot + 2 queued

@@ -2,7 +2,10 @@
 for the known awkward shapes (whisper/hymba vocab, B=1 long-context)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import jax
 

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.models.model import build_model
