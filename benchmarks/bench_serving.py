@@ -73,7 +73,11 @@ def run(report) -> None:
         lens = [5 + 3 * (i % 4) for i in range(B)]   # mixed lengths
         prompts = _prompts(cfg, lens)
 
-        eng = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ)
+        # paged=False: this bench measures the STRIPE admission path
+        # against the seed's host-copy (and resets slots by hand, which
+        # would leak pool blocks); bench_paged_kv covers the pool.
+        eng = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                            paged=False)
 
         def admit_device():
             reqs = [Request(rid=i, prompt=list(p), max_new_tokens=1)
@@ -102,7 +106,8 @@ def run(report) -> None:
                    "host_copy / device")
 
         # ------------------------------ decode-step latency, mixed lengths
-        eng2 = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ)
+        eng2 = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                             paged=False)
         reqs = [Request(rid=i, prompt=list(p), max_new_tokens=10 ** 6)
                 for i, p in enumerate(prompts)]
         assert eng2.add_requests(reqs) == B

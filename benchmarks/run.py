@@ -15,6 +15,7 @@ validating the paper's claims. Exit code 1 if any check fails.
 | bench_multimodel  | TPU adaptation: mesh space-sharing                |
 | bench_kernels     | Pallas kernel correctness + analytic intensity    |
 | bench_serving     | slot-native engine: device admission vs host copy |
+| bench_paged_kv    | paged KV pool: concurrency at equal KV memory     |
 | bench_roofline    | §Roofline over the 40 dry-run artifacts           |
 | bench_extraction  | end-to-end extraction quality (trains the stack)  |
 """
@@ -34,6 +35,7 @@ MODULES = [
     "bench_multimodel",
     "bench_kernels",
     "bench_serving",
+    "bench_paged_kv",
     "bench_roofline",
     "bench_extraction",     # trains the full stack: ~6 min on 1 core
 ]

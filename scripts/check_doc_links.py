@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve.
+
+Scans every ``*.md`` under the repo (skipping experiment output dirs)
+for inline links ``[text](target)`` and validates:
+
+* relative file targets exist (resolved against the linking file);
+* ``#anchor`` fragments — same-file or cross-file — match a heading in
+  the target markdown file (GitHub slug rules: lowercase, punctuation
+  stripped, spaces to dashes);
+* absolute-path targets are rejected (they break outside this checkout).
+
+External links (http/https/mailto) are ignored. Exit code 1 with a
+report if anything is broken — CI runs this so README/docs
+cross-references cannot rot.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SKIP_DIRS = {".git", "experiments", "__pycache__", ".github"}
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part.startswith("/"):
+            errors.append(f"{md_path.relative_to(REPO)}: absolute link "
+                          f"{target!r} (use a relative path)")
+            continue
+        dest = md_path if not path_part \
+            else (md_path.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md_path.relative_to(REPO)}: broken link "
+                          f"{target!r} -> {path_part} does not exist")
+            continue
+        if anchor:
+            if dest.suffix != ".md":
+                errors.append(f"{md_path.relative_to(REPO)}: anchor on "
+                              f"non-markdown target {target!r}")
+            elif slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{md_path.relative_to(REPO)}: anchor "
+                              f"#{anchor} not found in "
+                              f"{dest.relative_to(REPO)}")
+    return errors
+
+
+def main() -> int:
+    md_files = [p for p in REPO.rglob("*.md")
+                if not (set(p.relative_to(REPO).parts[:-1]) & SKIP_DIRS)]
+    errors = []
+    for p in sorted(md_files):
+        errors.extend(check_file(p))
+    if errors:
+        print(f"{len(errors)} broken doc link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"doc links OK: {len(md_files)} markdown files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

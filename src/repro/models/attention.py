@@ -154,12 +154,47 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, sliding_window: int = 0):
     return _combine(scores, v_cache, q.shape[2])
 
 
+def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
+                           cache_len, *, sliding_window: int = 0):
+    """Decode one token per sequence against a shared KV **block pool**.
+
+    q/k_new/v_new: (B, 1, H*, hd); pool_k/pool_v: (num_blocks, bs, Hkv,
+    hd); block_table: (B, max_blocks) int32; cache_len: (B,) tokens
+    already cached per row. Row b's logical position j lives at
+    ``(block_table[b, j // bs], j % bs)`` — the new token's K/V is
+    scattered there first (owned blocks are disjoint across rows, so the
+    scatter never collides; unowned table entries point at the reserved
+    scratch block 0), then each row's effective cache is gathered back
+    through its table row and masked exactly like the stripe path, so
+    the attention math — and therefore the emitted token stream — is
+    unchanged. Returns (out, new_pool_k, new_pool_v).
+
+    This is the portable jnp reference: the gather materializes
+    (B, max_blocks*bs) K/V transiently. A TPU paged-attention kernel
+    would read through the table in-place; the *resident* memory — the
+    pool — is already block-granular, which is what admission is
+    accounted against.
+    """
+    bs = pool_k.shape[1]
+    idx = jnp.asarray(cache_len, jnp.int32).reshape(-1)     # (B,)
+    rows = jnp.arange(idx.shape[0])
+    phys = block_table[rows, idx // bs]                     # (B,)
+    pool_k = pool_k.at[phys, idx % bs].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, idx % bs].set(v_new[:, 0].astype(pool_v.dtype))
+    B, max_blocks = block_table.shape
+    gk = pool_k[block_table].reshape(B, max_blocks * bs, *pool_k.shape[2:])
+    gv = pool_v[block_table].reshape(B, max_blocks * bs, *pool_v.shape[2:])
+    out = decode_attention(q, gk, gv, idx + 1, sliding_window=sliding_window)
+    return out, pool_k, pool_v
+
+
 def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
                     positions=None, mrope_positions=None, causal=True,
-                    sliding_window=None, plan=None):
+                    sliding_window=None, plan=None, block_table=None):
     """Full attention sub-block incl. output proj. Returns (out, new_cache).
 
-    cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None.
+    cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None — or, with
+    ``block_table`` set, the paged pool dict(k=(num_blocks,bs,Hkv,hd), ...).
     """
     win = cfg.sliding_window if sliding_window is None else sliding_window
     if mode == "decode":
@@ -182,21 +217,27 @@ def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
             rep = lambda t: jax.lax.with_sharding_constraint(
                 t, plan.ns(P(b, None, None, None)))
             q, k, v = rep(q), rep(k), rep(v)
-        idx = jnp.asarray(cache_len, jnp.int32)
-        if idx.ndim == 0:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        if block_table is not None:
+            # paged KV: cache leaves are the shared block pool
+            o, k_cache, v_cache = paged_decode_attention(
+                q, cache["k"], cache["v"], k, v, block_table, cache_len,
+                sliding_window=win)
         else:
-            # per-slot write index: scatter row b's K/V at [b, idx[b]]
-            rows = jnp.arange(k.shape[0])
-            k_cache = cache["k"].at[rows, idx].set(
-                k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[rows, idx].set(
-                v[:, 0].astype(cache["v"].dtype))
-        o = decode_attention(q, k_cache, v_cache, cache_len + 1,
-                             sliding_window=win)
+            idx = jnp.asarray(cache_len, jnp.int32)
+            if idx.ndim == 0:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            else:
+                # per-slot write index: scatter row b's K/V at [b, idx[b]]
+                rows = jnp.arange(k.shape[0])
+                k_cache = cache["k"].at[rows, idx].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[rows, idx].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            o = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                 sliding_window=win)
         if plan is not None and plan.mesh is not None:
             # pin the joined attention output replicated as well — the
             # row-sharded w_o otherwise drags head-sharding back through

@@ -211,15 +211,24 @@ class Model:
         return logits, cache
 
     # ---------------- decode ----------------
-    def decode_step(self, params, token, cache, cache_len, plan=None):
+    def decode_step(self, params, token, cache, cache_len, plan=None,
+                    block_table=None):
         """token (B,1) int32; cache_len = existing token count — a scalar
         (all rows at one length) or a (B,) vector (per-slot lengths for
         mixed-length continuous batching); the new token is written at
-        index cache_len (per row when a vector)."""
+        index cache_len (per row when a vector).
+
+        block_table: optional (B, max_blocks) int32 — paged-KV mode. The
+        cache leaves are then a shared block pool (L, num_blocks,
+        block_size, Hkv, hd) and row b's logical position j resolves to
+        (block_table[b, j // block_size], j % block_size). Requires a
+        (B,) cache_len vector."""
         cfg = self.cfg
         B = token.shape[0]
         x = _embed_tokens(params, cfg, token)
         extras = {"cache_len": cache_len}
+        if block_table is not None:
+            extras["block_table"] = jnp.asarray(block_table, jnp.int32)
         if cfg.rope == "learned":
             x = x + layers.sinusoidal_pos(
                 jnp.reshape(cache_len, (-1, 1)), cfg.d_model, x.dtype)
@@ -259,6 +268,22 @@ class Model:
             cache["xk"] = jnp.zeros((L, B, cfg.n_frames, Hkv, hd), cfg.dtype)
             cache["xv"] = jnp.zeros((L, B, cfg.n_frames, Hkv, hd), cfg.dtype)
         return cache
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        """Zeroed block-pool KV: ``(L, num_blocks, block_size, Hkv, hd)``
+        per leaf, shared by every slot through a per-slot block table
+        (see ``repro.serve.blocks``). Only pure-attention families page;
+        recurrent state is O(1) in sequence length and keeps the
+        per-slot fixed cache."""
+        cfg = self.cfg
+        kind = transformer.block_kind(cfg)
+        if kind not in ("dense", "moe"):
+            raise ValueError(f"paged KV unsupported for family {kind!r} "
+                             "(recurrent/cross-attn leaves are not paged)")
+        L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        shape = (L, num_blocks, block_size, Hkv, hd)
+        return {"k": jnp.zeros(shape, cfg.dtype),
+                "v": jnp.zeros(shape, cfg.dtype)}
 
     # ---------------- shape stand-ins ----------------
     def input_specs(self, shape) -> dict:

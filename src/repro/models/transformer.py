@@ -89,7 +89,8 @@ def apply_block(x, p, cfg, *, kind, mode, cache=None, extras=None, plan=None):
         h, p["attn"], cfg, mode=mode, cache=acache,
         cache_len=extras.get("cache_len"),
         positions=extras.get("positions"),
-        mrope_positions=extras.get("mrope_positions"), plan=plan)
+        mrope_positions=extras.get("mrope_positions"), plan=plan,
+        block_table=extras.get("block_table"))
 
     if kind == "hybrid":
         scache = None if cache is None else {"state": cache["ssm_state"]}

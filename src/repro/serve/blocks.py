@@ -1,0 +1,109 @@
+"""Block-pool KV memory: the host-side allocator behind the paged cache.
+
+One pool owns ``num_blocks`` interchangeable KV blocks of ``block_size``
+tokens each (the device tensors live in the engine as
+``model.init_paged_cache(num_blocks, block_size)`` — shape
+``(L, num_blocks, block_size, Hkv, hd)`` per leaf). A sequence's KV is
+scattered over whichever physical blocks were free at admission/growth
+time; logical token ``j`` of a slot lives at
+``(table[j // block_size], j % block_size)``. Contiguity is never
+required, so there is no external fragmentation: any free block
+satisfies any allocation, and the only waste is the tail of a
+sequence's last block (< ``block_size`` tokens per sequence).
+
+Physical block 0 is **reserved as scratch** and never handed out:
+engine slots that are inactive (or parked on pool exhaustion) still
+ride through the batched decode step, and their K/V scatter lands in
+block 0 via their zeroed table entries instead of corrupting a block
+owned by a live sequence. Scratch contents are garbage by design and
+are never read by an owned slot (every owned position maps to an
+allocated block).
+
+The allocator tracks an owner tag per block purely to make
+double-ownership a hard error (and testable as a property) rather than
+a silent cross-sequence KV corruption.
+"""
+from __future__ import annotations
+
+SCRATCH_BLOCK = 0
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` (ceil division; 0 -> 0)."""
+    return -(-n_tokens // block_size)
+
+
+class BlockPool:
+    """All-or-nothing allocator over interchangeable KV blocks.
+
+    ``total`` excludes the reserved scratch block; ``alloc`` returns the
+    physical block ids or ``None`` when the pool cannot satisfy the
+    request (the caller parks / sheds — partial grants would deadlock
+    admission). Freed blocks go back LIFO so recently-touched device
+    memory is reused first.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is scratch)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, 0, -1))   # LIFO, 0 reserved
+        self._owner: dict[int, object] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def total(self) -> int:
+        """Allocatable blocks (scratch excluded)."""
+        return self.num_blocks - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.total - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the pool in use, in [0, 1]."""
+        return self.used / self.total if self.total else 1.0
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for_tokens(n_tokens, self.block_size)
+
+    def owner_of(self, block: int):
+        return self._owner.get(block)
+
+    # --------------------------------------------------------- alloc/free
+    def alloc(self, n: int, owner) -> list | None:
+        """Take ``n`` blocks for ``owner``; None if fewer are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._owner[b] = owner
+        return got
+
+    def free(self, blocks: list, owner) -> None:
+        """Return ``blocks`` to the pool; ownership is verified so a
+        double-free or a free of someone else's block fails loudly."""
+        for b in blocks:
+            if b not in self._owner:
+                raise ValueError(f"block {b}: freed but not allocated")
+            if self._owner[b] != owner:
+                raise ValueError(f"block {b}: owned by {self._owner[b]!r}, "
+                                 f"freed by {owner!r}")
+            del self._owner[b]
+            self._free.append(b)
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"total": self.total, "used": self.used,
+                "available": self.available, "occupancy": self.occupancy,
+                "block_size": self.block_size}

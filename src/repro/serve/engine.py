@@ -1,43 +1,62 @@
-"""Slot-native serving engine: device-resident KV cache, batched
+"""Slot-native serving engine: paged block-pool KV cache, batched
 prefill admission, and mixed-length continuous-batching decode for one
 model (the substrate under every PaaS replica when the payload is an LM).
 
-The engine slots requests into a fixed-capacity batch (contiguous KV
-cache, one slot per sequence). Three properties distinguish it from the
-lock-step predecessor:
+The engine slots requests into a fixed-capacity batch (one slot per
+sequence). KV memory comes in two layouts:
+
+* **Paged (default for pure-attention caches, leaves ``{k, v}``)** — a
+  shared :class:`~repro.serve.blocks.BlockPool` of ``num_blocks x
+  block_size`` tokens per layer. A slot holds only the blocks its
+  sequence actually needs (``ceil(len / block_size)``), mapped through a
+  per-slot block table; admission is gated on *blocks*, not on a free
+  ``max_seq`` stripe, so many short requests fit where few stripes did.
+  Decode grows a slot's table lazily as it crosses block boundaries;
+  on exhaustion the slot **parks** (skips token emission, state intact)
+  until another request frees blocks — and if every active slot is
+  parked, the newest admission is **preempted** (blocks freed, request
+  re-queued for recompute re-admission) so the oldest can advance.
+* **Fixed-stripe (recurrent rwkv / hybrid-SSM / cross-attn caches)** —
+  one ``max_seq`` stripe per slot at ``model.init_cache(B, max_seq)``.
+  Recurrent state is O(1) in sequence length, so paging buys nothing
+  there; the stripe path is also the reference the paged path must
+  match token-for-token.
+
+Three properties carry over from the stripe engine and hold in both
+layouts:
 
 * **Device-side admission** — prefill writes the new sequence's KV into
-  its slot with ``jax.lax.dynamic_update_slice`` inside one jitted
-  function (cache buffers donated); the full cache never round-trips
-  through host numpy. Several waiting requests prefill as one batch.
+  its slot (stripe) or its blocks (pool) with jitted
+  ``jax.lax.dynamic_update_slice`` (cache buffers donated); the full
+  cache never round-trips through host numpy. Several waiting requests
+  prefill as one batch.
 * **Mixed-length decode** — every slot keeps its own length; one decode
   step ropes, writes, and masks each row at its own position, so slots
   at different depths decode together bit-exactly for dense/recurrent
-  families (no padding to the longest active slot). MoE is the one
-  caveat: capacity-bounded expert routing shares its per-expert slot
-  budget across the co-batched rows, so under expert overflow an MoE
-  decode step can drop a token's expert contribution that solo serving
-  would keep — inherent to capacity routing, and the reason MoE
-  admission prefills one row at a time (see below).
+  families. MoE is the one caveat (capacity routing shares per-expert
+  budget across co-batched rows — see docs/serving.md, "The MoE
+  caveat"), and the reason MoE admission prefills one row at a time.
 * **Slot recycling mid-flight** — EOS/stop-token early exit frees a slot
-  the moment its request finishes; the next waiting request is admitted
-  into it while the other slots keep decoding.
+  (and its blocks) the moment its request finishes; the next waiting
+  request is admitted into it while the other slots keep decoding.
 
-Prompts for pure-attention caches (keys ``{k, v}``) are right-padded to
-power-of-two buckets so admission compiles O(B x log max_seq) variants,
-not one per prompt length; pad positions are never attended (per-slot
-length masks them) and are overwritten as decode advances. Recurrent
-caches (rwkv / hybrid SSM state) cannot absorb pad tokens, so those
-group by exact prompt length instead.
+Prompts for paddable caches are right-padded to power-of-two buckets so
+admission compiles O(B x log max_seq) variants, not one per prompt
+length; pad positions are never attended (per-slot length masks them)
+and pad tail blocks are never allocated — a paged slot pays blocks for
+its *real* tokens only.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.blocks import BlockPool
 
 _MIN_BUCKET = 8
 
@@ -53,6 +72,7 @@ class Request:
     out_tokens: list = field(default_factory=list)
     submitted_s: float = field(default_factory=time.perf_counter)
     done_s: float | None = None
+    preemptions: int = 0            # times evicted for recompute readmission
 
     @property
     def latency_s(self) -> float:
@@ -72,13 +92,16 @@ def _bucket(n: int, cap: int) -> int:
 
 class ServingEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
-                 max_seq: int = 256, plan=None):
+                 max_seq: int = 256, plan=None, paged: bool | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 reserve_blocks: int = 1):
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.plan = plan
-        self.caches = model.init_cache(batch_size, max_seq)
+        cache_spec = jax.eval_shape(lambda: model.init_cache(1, _MIN_BUCKET))
+        pure_attn = set(cache_spec) <= {"k", "v"}
         # MoE routing flattens the whole (rows x tokens) block into one
         # shared per-expert capacity, so pad tokens / co-batched rows can
         # displace real tokens from dispatch — prefill those one row at a
@@ -86,15 +109,41 @@ class ServingEngine:
         is_moe = bool(getattr(model.cfg, "n_experts", 0))
         # pure-attention caches tolerate right-padded prompts (pad KV is
         # masked, then overwritten); recurrent state does not.
-        self._paddable = set(self.caches) <= {"k", "v"} and not is_moe
+        self._paddable = pure_attn and not is_moe
         self._solo_prefill = is_moe
+        # recurrent / cross-attn state is O(1) in sequence length: paging
+        # buys nothing, keep the stripe layout there.
+        self.paged = pure_attn if paged is None else paged
+        if self.paged and not pure_attn:
+            raise ValueError("paged KV requires a pure-attention {k, v} "
+                             f"cache; got leaves {sorted(cache_spec)}")
         self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
         self.slot_req: list = [None] * batch_size
         self._finished_at_admit: list = []
         self._used_slots: set = set()
+        self._waiting: deque = deque()       # preempted, awaiting re-admission
+        self._admit_order = np.zeros(batch_size, np.int64)
+        self._admit_seq = 0
+
+        if self.paged:
+            self.block_size = block_size
+            self.blocks_per_slot = -(-max_seq // block_size)
+            if num_blocks is None:
+                # parity default: same token capacity as B fixed stripes
+                num_blocks = batch_size * self.blocks_per_slot + 1  # + scratch
+            self.pool = BlockPool(num_blocks, block_size)
+            self.reserve_blocks = min(reserve_blocks, max(self.pool.total - 1,
+                                                          0))
+            self.caches = model.init_paged_cache(num_blocks, block_size)
+            self.block_table = np.zeros((batch_size, self.blocks_per_slot),
+                                        np.int32)
+            self.slot_blocks: list = [[] for _ in range(batch_size)]
+        else:
+            self.pool = None
+            self.caches = model.init_cache(batch_size, max_seq)
 
         def admit(p, caches, tokens, last_idx, slots):
-            """Batched prefill + device-side slot insertion.
+            """Batched prefill + device-side stripe insertion.
 
             tokens (k, S) right-padded prompts, last_idx (k,) index of each
             row's final real token, slots (k,) destination slot per row.
@@ -112,16 +161,57 @@ class ServingEngine:
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return nxt, caches
 
+        def prefill_paged(p, tokens, last_idx):
+            """Batched prefill for the pool path: returns the first token
+            per row and the prefill KV padded (with zeros, never attended)
+            to a block_size multiple so every logical block slices full."""
+            logits, pref = model.prefill(p, {"tokens": tokens}, plan,
+                                         last_idx=last_idx)
+            pad = (-tokens.shape[1]) % block_size
+            if pad:
+                pref = {key: jnp.pad(pref[key],
+                                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                        for key in pref}
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, pref
+
+        def write_block(caches, pref, row, start, phys):
+            """Copy one logical block of row ``row`` of the prefill KV
+            (token window [start, start+block_size)) into physical pool
+            block ``phys`` — a device-side dynamic_update_slice on the
+            donated pool, same no-host-copy property as the stripe path."""
+            for key in caches:
+                L = pref[key].shape[0]
+                chunk = jax.lax.dynamic_slice(
+                    pref[key], (jnp.int32(0), row, start, jnp.int32(0),
+                                jnp.int32(0)),
+                    (L, 1, block_size) + pref[key].shape[3:])
+                caches[key] = jax.lax.dynamic_update_slice(
+                    caches[key], chunk.astype(caches[key].dtype),
+                    (jnp.int32(0), phys) + (jnp.int32(0),) * 3)
+            return caches
+
         def decode(p, tok, caches, lengths):
             logits, caches = model.decode_step(p, tok, caches, lengths, plan)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return nxt, caches
 
+        def decode_paged(p, tok, caches, lengths, table):
+            logits, caches = model.decode_step(p, tok, caches, lengths, plan,
+                                               block_table=table)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
         self._admit = jax.jit(admit, donate_argnums=(1,))
-        self._decode = jax.jit(decode, donate_argnums=(2,))
+        self._prefill_paged = jax.jit(prefill_paged)
+        self._write_block = jax.jit(write_block, donate_argnums=(0,))
+        self._decode = jax.jit(decode_paged if self.paged else decode,
+                               donate_argnums=(2,))
         self.metrics = {"prefills": 0, "prefill_batches": 0,
                         "decode_steps": 0, "completed": 0,
-                        "stop_token_exits": 0, "slot_reuses": 0}
+                        "stop_token_exits": 0, "slot_reuses": 0,
+                        "blocks_grown": 0, "parked_slot_steps": 0,
+                        "preemptions": 0}
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -135,9 +225,59 @@ class ServingEngine:
     def active(self) -> int:
         return self.B - len(self.free_slots())
 
+    @property
+    def waiting(self) -> int:
+        """Preempted requests parked off-device, pending re-admission."""
+        return len(self._waiting)
+
     def load(self) -> int:
-        """Occupied slots — consumed by least-loaded balancing."""
-        return self.active
+        """Occupied slots + preempted backlog — least-loaded balancing."""
+        return self.active + len(self._waiting)
+
+    # --------------------------------------------------------- pool probes
+    @staticmethod
+    def _eff_prompt(req: Request) -> list:
+        """The tokens a (re-)admission must prefill: the prompt plus any
+        tokens already generated before a preemption evicted the slot."""
+        return req.prompt + req.out_tokens
+
+    def blocks_needed(self, req: Request) -> int:
+        """Pool blocks this request's admission requires (0 when not
+        paged — stripe admission is gated on free slots alone)."""
+        if not self.paged:
+            return 0
+        return self.pool.blocks_for(len(self._eff_prompt(req)))
+
+    def blocks_available(self) -> int | None:
+        return self.pool.available if self.paged else None
+
+    def can_admit(self, req: Request, planned_blocks: int = 0) -> bool:
+        """Would admission succeed right now, with ``planned_blocks``
+        already promised to earlier picks? Stripe engines admit whenever
+        a slot is free; paged engines additionally demand blocks for the
+        prompt plus ``reserve_blocks`` of decode-growth headroom (waived
+        when the engine is idle — an empty pool has nothing to protect)."""
+        if not self.paged:
+            return True
+        need = self.blocks_needed(req)
+        avail = self.pool.available - planned_blocks
+        if need + self.reserve_blocks <= avail:
+            return True
+        return self.active == 0 and planned_blocks == 0 and need <= avail
+
+    def memory_pressure(self) -> float:
+        """Fraction of KV memory in use: pool occupancy when paged, slot
+        occupancy otherwise. The Scheduler sheds on this."""
+        if self.paged:
+            return self.pool.occupancy
+        return self.active / self.B if self.B else 1.0
+
+    def pool_stats(self) -> dict:
+        if not self.paged:
+            return {"paged": False, "slots": self.B, "active": self.active,
+                    "occupancy": self.memory_pressure()}
+        return {"paged": True, "waiting": len(self._waiting),
+                **self.pool.stats()}
 
     # --------------------------------------------------------- admission
     def add_request(self, req: Request) -> bool:
@@ -145,20 +285,50 @@ class ServingEngine:
         return self.add_requests([req]) == 1
 
     def add_requests(self, reqs: list) -> int:
-        """Admit as many of ``reqs`` (in order) as there are free slots,
-        prefilling each shape-compatible group as ONE batched call whose
-        slot insertion happens on device. Returns #admitted."""
+        """Admit as many of ``reqs`` (in order, behind any preempted
+        requests awaiting re-admission) as free slots AND pool blocks
+        allow, prefilling each shape-compatible group as ONE batched call
+        whose slot insertion happens on device. Returns how many of the
+        *caller's* requests were admitted (a prefix of ``reqs``)."""
         for r in reqs:
             if len(r.prompt) > self.max_seq:
                 raise ValueError(f"request {r.rid}: prompt length "
                                  f"{len(r.prompt)} > max_seq {self.max_seq}")
+            if self.paged and \
+                    self.pool.blocks_for(len(r.prompt)) > self.pool.total:
+                raise ValueError(f"request {r.rid}: prompt needs "
+                                 f"{self.pool.blocks_for(len(r.prompt))} "
+                                 f"blocks > pool total {self.pool.total}")
         free = self.free_slots()
-        take = reqs[:len(free)]
+        cand = list(self._waiting) + list(reqs)
+        take, planned = [], 0
+        for r in cand:
+            if len(take) >= len(free):
+                break
+            P = len(self._eff_prompt(r))
+            if P > self.max_seq:
+                # a preempted request regrew past capacity: it cannot be
+                # re-prefilled — finish it as capacity-truncated
+                r.done_s = time.perf_counter()
+                self.metrics["completed"] += 1
+                self._finished_at_admit.append(r)
+                self._waiting.remove(r)
+                continue
+            if self.paged:
+                if not self.can_admit(r, planned):
+                    break            # in-order admission: head waits
+                planned += self.pool.blocks_for(P)
+            take.append(r)
+        n_from_waiting = 0
+        for r in take:
+            if self._waiting and self._waiting[0] is r:
+                self._waiting.popleft()
+                n_from_waiting += 1
         if not take:
             return 0
         groups: dict = {}
-        for n, (req, slot) in enumerate(zip(take, free)):
-            P = len(req.prompt)
+        for n, (req, slot) in enumerate(zip(take, self.free_slots())):
+            P = len(self._eff_prompt(req))
             if self._solo_prefill:
                 key = (n,)                       # one row per prefill call
             elif self._paddable:
@@ -168,50 +338,136 @@ class ServingEngine:
             groups.setdefault(key, []).append((req, slot))
         for key, members in groups.items():
             width = key if isinstance(key, int) \
-                else len(members[0][0].prompt)
+                else len(self._eff_prompt(members[0][0]))
             toks = np.zeros((len(members), width), np.int32)
             last = np.zeros(len(members), np.int32)
             slots = np.zeros(len(members), np.int32)
             for j, (req, slot) in enumerate(members):
-                P = len(req.prompt)
-                toks[j, :P] = req.prompt
-                last[j] = P - 1
+                eff = self._eff_prompt(req)
+                toks[j, :len(eff)] = eff
+                last[j] = len(eff) - 1
                 slots[j] = slot
-            nxt, self.caches = self._admit(
-                self.params, self.caches, jnp.asarray(toks),
-                jnp.asarray(last), jnp.asarray(slots))
+            if self.paged:
+                nxt, pref = self._prefill_paged(
+                    self.params, jnp.asarray(toks), jnp.asarray(last))
+                for j, (req, slot) in enumerate(members):
+                    self._insert_paged(pref, j, slot,
+                                       len(self._eff_prompt(req)))
+            else:
+                nxt, self.caches = self._admit(
+                    self.params, self.caches, jnp.asarray(toks),
+                    jnp.asarray(last), jnp.asarray(slots))
             nxt = np.asarray(nxt)
             for j, (req, slot) in enumerate(members):
+                P = len(self._eff_prompt(req))
                 req.out_tokens.append(int(nxt[j]))
                 if slot in self._used_slots:
                     self.metrics["slot_reuses"] += 1
                 self._used_slots.add(slot)
                 self.slot_req[slot] = req
-                self.slot_len[slot] = len(req.prompt)
+                self.slot_len[slot] = P
+                self._admit_seq += 1
+                self._admit_order[slot] = self._admit_seq
                 self.metrics["prefills"] += 1
                 if self._is_done(req):
                     self._retire(slot)
                     self._finished_at_admit.append(req)
             self.metrics["prefill_batches"] += 1
-        return len(take)
+        return len(take) - n_from_waiting
+
+    def _insert_paged(self, pref, row: int, slot: int, n_tokens: int) -> None:
+        """Allocate the slot's blocks and scatter its prefill KV into the
+        pool block-by-block (jitted dynamic_update_slice, pool donated)."""
+        n_blk = self.pool.blocks_for(n_tokens)
+        blocks = self.pool.alloc(n_blk, owner=slot)
+        assert blocks is not None, "admission accounting let an alloc fail"
+        self.slot_blocks[slot] = blocks
+        self.block_table[slot, :] = 0
+        self.block_table[slot, :n_blk] = blocks
+        for i, phys in enumerate(blocks):
+            self.caches = self._write_block(
+                self.caches, pref, np.int32(row),
+                np.int32(i * self.block_size), np.int32(phys))
 
     # ------------------------------------------------------------- decode
     def _is_done(self, req: Request) -> bool:
         return (len(req.out_tokens) >= req.max_new_tokens
                 or req.finished_by_stop)
 
+    def _release_blocks(self, slot: int) -> None:
+        if self.paged and self.slot_blocks[slot]:
+            self.pool.free(self.slot_blocks[slot], owner=slot)
+            self.slot_blocks[slot] = []
+            self.block_table[slot, :] = 0
+
     def _retire(self, slot: int) -> None:
         req = self.slot_req[slot]
         req.done_s = time.perf_counter()
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        self._release_blocks(slot)
         self.metrics["completed"] += 1
         if req.finished_by_stop and len(req.out_tokens) < req.max_new_tokens:
             self.metrics["stop_token_exits"] += 1
 
+    def _preempt(self, slot: int) -> None:
+        """Evict a slot under pool exhaustion: free its blocks and queue
+        the request for recompute re-admission (its prompt + generated
+        tokens prefill again when memory frees — the standard paged-KV
+        preemption, trading recompute for not deadlocking the batch)."""
+        req = self.slot_req[slot]
+        req.preemptions += 1
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self._release_blocks(slot)
+        self._waiting.append(req)
+        self.metrics["preemptions"] += 1
+
+    def _grow_or_park(self, active: list) -> list:
+        """Give every active slot a block for its next token; slots the
+        pool cannot serve park (skip this step, state intact). If nobody
+        can advance, preempt newest admissions until the oldest can."""
+        def grow(i) -> bool:
+            if self.slot_len[i] // self.block_size < len(self.slot_blocks[i]):
+                return True                     # room in the last block
+            got = self.pool.alloc(1, owner=i)
+            if got is None:
+                return False
+            self.slot_blocks[i].extend(got)
+            self.block_table[i, len(self.slot_blocks[i]) - 1] = got[0]
+            self.metrics["blocks_grown"] += 1
+            return True
+
+        parked = [i for i in list(active) if not grow(i)]
+        for i in parked:
+            active.remove(i)
+        if parked and not active:
+            # total stall: every active slot needs a block and none is
+            # free (all blocks are held by the stalled slots themselves).
+            order = sorted(parked, key=lambda i: self._admit_order[i])
+            while len(order) > 1:
+                victim = order.pop()            # newest admission recomputes
+                parked.remove(victim)
+                self._preempt(victim)
+                if grow(order[0]):              # oldest advances first
+                    oldest = order.pop(0)
+                    parked.remove(oldest)
+                    active.append(oldest)
+                    break
+            if len(order) == 1 and not active:
+                # one slot owns the whole pool and still needs more:
+                # nothing left to preempt — finish it capacity-truncated
+                i = order[0]
+                parked.remove(i)
+                self._finished_at_admit.append(self.slot_req[i])
+                self._retire(i)
+        self.metrics["parked_slot_steps"] += len(parked)
+        return parked
+
     def step(self) -> list:
         """One decode step over all active slots (each at its own length).
-        Returns finished requests."""
+        Parked slots ride the batch but emit nothing. Returns finished
+        requests."""
         finished, self._finished_at_admit = self._finished_at_admit, []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -222,14 +478,24 @@ class ServingEngine:
                 finished.append(self.slot_req[i])
                 self._retire(i)
                 active.remove(i)
+        if self.paged and active:
+            self._grow_or_park(active)
+            finished.extend(self._finished_at_admit)
+            self._finished_at_admit = []
         if not active:
             return finished
         tok = np.zeros((self.B, 1), np.int32)
-        for i in active:
-            tok[i, 0] = self.slot_req[i].out_tokens[-1]
-        nxt, self.caches = self._decode(self.params, jnp.asarray(tok),
-                                        self.caches,
-                                        jnp.asarray(self.slot_len))
+        for i, r in enumerate(self.slot_req):
+            if r is not None:       # parked rows too: their scatter lands
+                tok[i, 0] = r.out_tokens[-1]    # in the scratch block
+        if self.paged:
+            nxt, self.caches = self._decode(
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.asarray(self.slot_len), jnp.asarray(self.block_table))
+        else:
+            nxt, self.caches = self._decode(self.params, jnp.asarray(tok),
+                                            self.caches,
+                                            jnp.asarray(self.slot_len))
         self.metrics["decode_steps"] += 1
         nxt = np.asarray(nxt)
         for i in active:
@@ -244,10 +510,11 @@ class ServingEngine:
     # ------------------------------------------------------------- run
     def run(self, requests: list) -> list:
         """Serve a list of requests to completion (batched, slots recycled
-        as soon as they free up)."""
+        as soon as they free up, preempted requests re-admitted)."""
         pending = list(requests)
         done: list = []
-        while pending or self.active or self._finished_at_admit:
+        while pending or self.active or self._waiting \
+                or self._finished_at_admit:
             n = self.add_requests(pending)
             del pending[:n]
             done.extend(self.step())

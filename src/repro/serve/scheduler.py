@@ -21,6 +21,16 @@ With ``max_queue`` set, submission is bounded (NGINX worker-queue
 semantics: excess requests are rejected, counted in ``stats.rejected``);
 ``deadline`` additionally rejects at submit time any request that is
 already past its deadline.
+
+Paged engines gate admission on **pool blocks**, not just free slots:
+the fill loop stops at the first pick the pool cannot hold (in-order, no
+bypass — a blocked head is not starved by smaller requests behind it),
+and with ``pressure_shed`` set the scheduler sheds queued work when the
+engine reports memory pressure at or above the threshold: the backlog is
+trimmed — worst-ranked first (lowest priority / latest deadline / back
+of the queue) — until its total block demand fits what the pool can
+still hold alongside the resident sequences. Slot exhaustion is no
+longer the only shedding trigger; memory is.
 """
 from __future__ import annotations
 
@@ -63,11 +73,12 @@ class Scheduler:
     """Admission + slot-filling policy over a ServingEngine."""
 
     def __init__(self, engine: ServingEngine, *, policy: str = "fifo",
-                 max_queue: int = 0):
+                 max_queue: int = 0, pressure_shed: float | None = None):
         assert policy in POLICIES, policy
         self.engine = engine
         self.policy = policy
         self.max_queue = max_queue            # 0 = unbounded
+        self.pressure_shed = pressure_shed    # occupancy threshold, None=off
         self.queue: deque = deque()
         self.stats = SchedulerStats()
         self._enq_t: dict[int, float] = {}
@@ -75,7 +86,9 @@ class Scheduler:
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> bool:
-        if len(req.prompt) > self.engine.max_seq:
+        if len(req.prompt) > self.engine.max_seq or \
+                (self.engine.paged and self.engine.blocks_needed(req)
+                 > self.engine.pool.total):
             # unservable: would raise from the engine mid-batch at tick
             # time and take its co-dequeued batchmates down with it
             self.stats.rejected += 1
@@ -117,25 +130,72 @@ class Scheduler:
         self.stats.shed += 1
         self.shed_requests.append(req)
 
+    def _shed_index(self) -> int:
+        """Worst-ranked queued request — the opposite end of the scale
+        ``_next_index`` picks from: lowest priority (latest arrival on
+        ties), latest deadline (no-SLO requests first), or the back of
+        the queue for fifo/spf."""
+        if self.policy == "priority":
+            return min(range(len(self.queue)),
+                       key=lambda i: (self.queue[i].priority, -i))
+        if self.policy == "deadline":
+            inf = float("inf")
+            return max(range(len(self.queue)),
+                       key=lambda i: (self.queue[i].deadline_s
+                                      if self.queue[i].deadline_s is not None
+                                      else inf))
+        return len(self.queue) - 1
+
+    def _shed_for_memory_pressure(self) -> None:
+        """When pool occupancy crosses ``pressure_shed``, bound the
+        backlog to what the KV pool can still hold next to the resident
+        sequences: shed worst-ranked queued requests until the queue's
+        total block demand fits the free pool. Fires on *memory*
+        pressure — a paged engine can have free slots and still be out
+        of KV blocks."""
+        avail = self.engine.blocks_available()
+        if avail is None:                       # fixed-stripe: slots gate
+            return
+        demand = sum(self.engine.blocks_needed(r) for r in self.queue)
+        while self.queue and demand > avail:
+            i = self._shed_index()
+            req = self.queue[i]
+            del self.queue[i]
+            demand -= self.engine.blocks_needed(req)
+            self._shed(req)
+
     # ------------------------------------------------------------ serving
     def tick(self) -> list:
-        """Fill free slots (one batched prefill), run one decode step.
-        Returns finished requests."""
-        batch = []
+        """Fill free slots (one batched prefill, bounded by pool blocks),
+        run one decode step. Returns finished requests."""
+        if self.pressure_shed is not None and self.queue \
+                and self.engine.memory_pressure() >= self.pressure_shed:
+            self._shed_for_memory_pressure()
+        batch, planned_blocks = [], 0
         while self.queue and len(batch) < len(self.engine.free_slots()):
             i = self._next_index()
             req = self.queue[i]
-            del self.queue[i]
             if self.policy == "deadline" and req.deadline_s is not None \
                     and req.deadline_s <= time.perf_counter():
+                del self.queue[i]
                 self._shed(req)
                 continue
+            if not self.engine.can_admit(req, planned_blocks):
+                break               # pool full: head waits for block frees
+            del self.queue[i]
+            planned_blocks += self.engine.blocks_needed(req)
             batch.append(req)
-        if batch:
+        if batch or self.engine.waiting:
+            # even with an empty batch the engine must get a chance to
+            # re-admit its preempted requests, or they'd wait forever
+            # once the scheduler queue drains
             admitted = self.engine.add_requests(batch)
-            assert admitted == len(batch)
+            # blocks may have gone to engine-internal re-admissions
+            # (preempted requests resume first): requeue the remainder
+            for req in reversed(batch[admitted:]):
+                self.queue.appendleft(req)
             now = time.perf_counter()
-            for req in batch:
+            for req in batch[:admitted]:
                 self.stats.queue_wait_s.append(now - self._enq_t.pop(req.rid))
         done = self.engine.step()
         self.stats.ticks += 1
@@ -152,9 +212,9 @@ class Scheduler:
         return done
 
     def drain(self) -> list:
-        """Run until queue and engine are empty."""
+        """Run until queue and engine (slots + preempted backlog) empty."""
         out = []
-        while self.queue or self.engine.active \
+        while self.queue or self.engine.active or self.engine.waiting \
                 or self.engine._finished_at_admit:
             out.extend(self.tick())
         return out

@@ -40,7 +40,7 @@ class LMReplica:
                                   repr=False)
 
     def load(self) -> int:
-        return len(self.scheduler.queue) + self.scheduler.engine.active
+        return len(self.scheduler.queue) + self.scheduler.engine.load()
 
     def __call__(self, payload: dict) -> dict:
         with self._lock:                   # one engine = one decode stream
@@ -52,10 +52,15 @@ class LMReplica:
                           deadline_s=payload.get("deadline_s"))
             # client errors: no other replica can serve these either, so
             # they must NOT look like replica failures to the balancer
-            if len(req.prompt) > self.scheduler.engine.max_seq:
+            eng = self.scheduler.engine
+            if len(req.prompt) > eng.max_seq:
                 raise RequestError(f"{self.name}: prompt length "
                                    f"{len(req.prompt)} > max_seq "
-                                   f"{self.scheduler.engine.max_seq}")
+                                   f"{eng.max_seq}")
+            if eng.paged and eng.blocks_needed(req) > eng.pool.total:
+                raise RequestError(f"{self.name}: prompt needs "
+                                   f"{eng.blocks_needed(req)} KV blocks > "
+                                   f"pool total {eng.pool.total}")
             if req.deadline_s is not None \
                     and req.deadline_s <= time.perf_counter():
                 raise RequestError(f"{self.name}: deadline already expired")
@@ -76,14 +81,23 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                     policy: str = "fifo", max_queue: int = 0,
                     priority: int = 2, depends_on: tuple = (),
                     supervisor: Any = None, balancer_policy: str = "rr",
-                    with_backup: bool = True, plan=None) -> Service:
+                    with_backup: bool = True, plan=None,
+                    paged: bool | None = None, block_size: int = 16,
+                    num_blocks: int | None = None,
+                    pressure_shed: float | None = None) -> Service:
     """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
-    optionally registered with a Supervisor (started in priority order)."""
+    optionally registered with a Supervisor (started in priority order).
+
+    ``paged``/``block_size``/``num_blocks`` configure each replica's KV
+    block pool (paged by default for pure-attention families);
+    ``pressure_shed`` arms the scheduler's memory-pressure shedding."""
     replicas = []
     for i in range(n_replicas):
         eng = ServingEngine(model, params, batch_size=batch_size,
-                            max_seq=max_seq, plan=plan)
-        sched = Scheduler(eng, policy=policy, max_queue=max_queue)
+                            max_seq=max_seq, plan=plan, paged=paged,
+                            block_size=block_size, num_blocks=num_blocks)
+        sched = Scheduler(eng, policy=policy, max_queue=max_queue,
+                          pressure_shed=pressure_shed)
         lm = LMReplica(f"{name}/{i}", sched)
         replicas.append(Replica(f"{name}/{i}", lm,
                                 backup=(with_backup and i == n_replicas - 1

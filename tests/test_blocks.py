@@ -1,0 +1,238 @@
+"""BlockPool allocator: alloc/free contracts, scratch reservation,
+double-ownership as a property, fragmentation over recycle cycles — and
+the engine-level edge cases: pool exhaustion mid-decode (park/resume)
+and preemption when every active slot stalls."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve.blocks import SCRATCH_BLOCK, BlockPool, blocks_for_tokens
+from repro.serve.engine import Request, ServingEngine
+
+
+# ------------------------------------------------------------- pure pool
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+    assert blocks_for_tokens(160, 16) == 10
+
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(8, 16)
+    assert pool.total == 7                   # block 0 is scratch
+    got = pool.alloc(3, owner="a")
+    assert got is not None and len(got) == 3
+    assert SCRATCH_BLOCK not in got
+    assert pool.used == 3 and pool.available == 4
+    assert all(pool.owner_of(b) == "a" for b in got)
+    pool.free(got, owner="a")
+    assert pool.used == 0 and pool.available == 7
+
+
+def test_alloc_is_all_or_nothing():
+    pool = BlockPool(4, 8)                   # 3 allocatable
+    assert pool.alloc(4, owner="x") is None
+    assert pool.available == 3               # nothing was taken
+    assert pool.alloc(3, owner="x") is not None
+    assert pool.alloc(1, owner="y") is None
+
+
+def test_free_validates_ownership():
+    pool = BlockPool(8, 16)
+    a = pool.alloc(2, owner="a")
+    with pytest.raises(ValueError, match="owned by"):
+        pool.free(a, owner="b")
+    pool.free(a, owner="a")
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.free(a, owner="a")              # double free
+
+
+def test_scratch_block_never_handed_out():
+    pool = BlockPool(5, 8)
+    got = pool.alloc(4, owner="x")           # drain the whole pool
+    assert got is not None and SCRATCH_BLOCK not in got
+    assert pool.available == 0
+
+
+def test_occupancy_and_stats():
+    pool = BlockPool(11, 4)
+    pool.alloc(5, owner=1)
+    assert pool.occupancy == pytest.approx(0.5)
+    s = pool.stats()
+    assert s["total"] == 10 and s["used"] == 5 and s["block_size"] == 4
+
+
+def test_no_fragmentation_after_many_recycle_cycles():
+    """Blocks are interchangeable: after arbitrary interleaved alloc/free
+    churn, a full-pool allocation still succeeds — there is no external
+    fragmentation to compact."""
+    pool = BlockPool(17, 8)                  # 16 allocatable
+    held = {}
+    for cycle in range(50):
+        n = 1 + (cycle * 7) % 5
+        got = pool.alloc(n, owner=cycle)
+        while got is None:                   # free oldest holders, retry
+            victim = min(held)
+            pool.free(held.pop(victim), owner=victim)
+            got = pool.alloc(n, owner=cycle)
+        held[cycle] = got
+        if cycle % 3 == 2 and held:
+            victim = max(held)
+            pool.free(held.pop(victim), owner=victim)
+    for owner, blocks in held.items():
+        pool.free(blocks, owner=owner)
+    assert pool.available == pool.total
+    full = pool.alloc(pool.total, owner="all")
+    assert full is not None and len(set(full)) == pool.total
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(min_value=0,
+                                                         max_value=6)),
+                    min_size=0, max_size=60))
+def test_property_no_block_double_owned(ops):
+    """Whatever alloc/free sequence runs, no physical block is ever owned
+    by two owners at once, the scratch block is never handed out, and
+    used + available always equals the pool total."""
+    pool = BlockPool(13, 4)
+    held: dict = {}
+    tag = 0
+    for is_alloc, n in ops:
+        if is_alloc:
+            tag += 1
+            got = pool.alloc(n, owner=tag)
+            if got is not None:
+                assert SCRATCH_BLOCK not in got
+                for b in got:
+                    for other_blocks in held.values():
+                        assert b not in other_blocks   # never double-owned
+                held[tag] = got
+            else:
+                assert n > pool.available or n > 0 and not pool.available
+        elif held:
+            victim = sorted(held)[n % len(held)]
+            pool.free(held.pop(victim), owner=victim)
+        assert pool.used + pool.available == pool.total
+        assert pool.used == sum(len(v) for v in held.values())
+
+
+# ------------------------------------------------- engine-level edge cases
+@pytest.fixture(scope="module")
+def stack():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, lens, max_new=4, seed=1):
+    rng = jax.random.key(seed)
+    out = []
+    for i, L in enumerate(lens):
+        rng, k = jax.random.split(rng)
+        out.append(Request(rid=i, max_new_tokens=max_new,
+                           prompt=jax.random.randint(
+                               k, (L,), 2, cfg.vocab_size).tolist()))
+    return out
+
+
+def test_exhaustion_mid_decode_parks_then_resumes(stack):
+    """A slot that cannot grow parks (no token emitted, state intact)
+    and resumes after another request frees blocks — output identical to
+    an uncontended run."""
+    cfg, model, params = stack
+    # pool of 5: two 1-block prompts admit (+1 growth block spare); the
+    # younger slot must park when both cross their block boundary
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        paged=True, block_size=8, num_blocks=6)
+    reqs = _reqs(cfg, [10, 12, 9], max_new=12)
+    done = eng.run(list(reqs))
+    assert len(done) == 3
+    assert eng.metrics["parked_slot_steps"] > 0      # exhaustion was hit
+    assert eng.pool.available == eng.pool.total      # all blocks returned
+    roomy = ServingEngine(model, params, batch_size=1, max_seq=64,
+                          paged=True, block_size=8)
+    for r in reqs:
+        (d,) = roomy.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                  max_new_tokens=12)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_total_stall_preempts_newest_and_completes(stack):
+    """When EVERY active slot needs a block and none is free, the newest
+    admission is evicted (recompute-on-resume) so the oldest advances;
+    the evicted request still completes correctly afterwards."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        paged=True, block_size=4, num_blocks=4)  # 3 blocks
+    reqs = _reqs(cfg, [4, 4], max_new=8)
+    done = eng.run(list(reqs))
+    assert len(done) == 2
+    assert eng.metrics["preemptions"] >= 1
+    assert sum(r.preemptions for r in reqs) >= 1
+    assert all(len(r.out_tokens) == 8 for r in reqs)
+    assert eng.pool.available == eng.pool.total
+    roomy = ServingEngine(model, params, batch_size=1, max_seq=64,
+                          paged=True, block_size=4)
+    for r in reqs:
+        (d,) = roomy.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                  max_new_tokens=8)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_single_slot_owning_whole_pool_is_truncated(stack):
+    """One request that outgrows the entire pool cannot be preempted
+    (nothing else holds blocks): it finishes capacity-truncated instead
+    of deadlocking."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=1, max_seq=64,
+                        paged=True, block_size=4, num_blocks=3)  # 2 blocks
+    (req,) = _reqs(cfg, [6], max_new=50)
+    (done,) = eng.run([req])
+    # 6 prompt tokens + decode until both blocks are full (8 positions)
+    assert len(done.out_tokens) < 50
+    assert eng.active == 0 and eng.waiting == 0
+    assert eng.pool.available == eng.pool.total
+
+
+def test_admission_gated_on_blocks_not_slots(stack):
+    """Plenty of free slots but a near-empty pool: admission takes only
+    what the pool can hold (plus growth reserve), in order."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=8, max_seq=64,
+                        paged=True, block_size=8, num_blocks=5)  # 4 blocks
+    reqs = _reqs(cfg, [8, 8, 8, 8], max_new=2)
+    admitted = eng.add_requests(list(reqs))
+    # 4 blocks: 3 x 1-block prompts fit with 1 reserve; the 4th must wait
+    assert admitted == 3
+    assert len(eng.free_slots()) == 5
+    done = eng.run(reqs[admitted:])
+    assert len(done) == 4 - admitted or eng.metrics["completed"] == 4
+
+
+def test_pool_state_consistent_with_slots(stack):
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        paged=True, block_size=8)
+    reqs = _reqs(cfg, [5, 20, 9], max_new=2)
+    eng.add_requests(list(reqs))
+    assert eng.pool.used == sum(len(b) for b in eng.slot_blocks)
+    assert eng.pool.used == 1 + 3 + 2        # ceil(5/8), ceil(20/8), ceil(9/8)
+    for slot, blocks in enumerate(eng.slot_blocks):
+        for b in blocks:
+            assert eng.pool.owner_of(b) == slot
+    stats = eng.pool_stats()
+    assert stats["paged"] and stats["used"] == 6
+    assert 0.0 < eng.memory_pressure() < 1.0

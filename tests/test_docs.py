@@ -1,0 +1,22 @@
+"""Docs hygiene: every intra-repo markdown link (and #anchor) resolves.
+Same check CI's docs job runs via scripts/check_doc_links.py."""
+import importlib.util
+from pathlib import Path
+
+
+def test_doc_links_resolve(capsys):
+    script = Path(__file__).resolve().parents[1] / "scripts" \
+        / "check_doc_links.py"
+    spec = importlib.util.spec_from_file_location("check_doc_links", script)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    rc = mod.main()
+    out = capsys.readouterr().out
+    assert rc == 0, f"broken doc links:\n{out}"
+
+
+def test_front_door_docs_exist():
+    repo = Path(__file__).resolve().parents[1]
+    for rel in ("README.md", "docs/architecture.md", "docs/paged-kv.md",
+                "docs/serving.md"):
+        assert (repo / rel).exists(), rel

@@ -211,3 +211,108 @@ def test_engine_load_reports_occupancy(stack):
     assert eng.load() == 0
     eng.add_requests(_reqs(cfg, [5, 6]))
     assert eng.load() == 2
+
+
+# --------------------------------------------------------------- paged KV
+def test_paged_is_default_for_dense_fixed_for_recurrent(stack):
+    """Pure-attention caches page; recurrent state keeps the stripe."""
+    cfg, model, params = stack
+    assert ServingEngine(model, params, batch_size=2, max_seq=64).paged
+    rcfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                               dtype=jnp.float32)
+    rmodel = build_model(rcfg)
+    rparams = rmodel.init(jax.random.key(0))
+    reng = ServingEngine(rmodel, rparams, batch_size=2, max_seq=64)
+    assert not reng.paged and reng.pool is None
+    with pytest.raises(ValueError, match="pure-attention"):
+        ServingEngine(rmodel, rparams, batch_size=2, max_seq=64, paged=True)
+
+
+def test_paged_matches_fixed_stripe_streams(stack):
+    """The tentpole regression: the block-pool layout emits exactly the
+    token streams of the fixed-stripe layout it replaces."""
+    cfg, model, params = stack
+    lens = [5, 14, 9, 17]
+    a, b = _reqs(cfg, lens, max_new=6), _reqs(cfg, lens, max_new=6)
+    ep = ServingEngine(model, params, batch_size=4, max_seq=64,
+                       paged=True, block_size=8)
+    ef = ServingEngine(model, params, batch_size=4, max_seq=64, paged=False)
+    ep.run(list(a))
+    ef.run(list(b))
+    for x, y in zip(a, b):
+        assert x.out_tokens == y.out_tokens, x.rid
+
+
+def test_paged_mixed_length_batch_matches_sequential(stack):
+    """Batched == sequential bit-exactness holds through the block
+    table: slots whose KV is scattered over disjoint pool blocks decode
+    together exactly as each decodes alone."""
+    cfg, model, params = stack
+    lens = [5, 11, 7, 14]
+    batched = _reqs(cfg, lens)
+    eng = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        paged=True, block_size=8)
+    done = eng.run(list(batched))
+    assert len(done) == 4
+    solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         paged=True, block_size=8)
+    for r in batched:
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_paged_moe_solo_prefill_first_token(stack):
+    """MoE pages too (its cache is pure {k, v}); the solo-prefill
+    admission caveat is orthogonal to the memory layout."""
+    cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        block_size=8)
+    assert eng.paged and eng._solo_prefill
+    reqs = _reqs(cfg, [5, 11, 5])
+    assert len(eng.run(list(reqs))) == 3
+    solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         block_size=8)
+    for r in reqs:
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens)])
+        assert d.out_tokens[0] == r.out_tokens[0], r.rid
+
+
+def test_paged_blocks_grow_lazily_and_free_on_eos(stack):
+    """A slot pays blocks for its real length only, grows one block at a
+    time as decode crosses block boundaries, and returns everything on
+    retirement."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=1, max_seq=64,
+                        paged=True, block_size=8)
+    (req,) = _reqs(cfg, [6], max_new=12)     # 6 + 12 tokens -> 3 blocks
+    assert eng.add_requests([req]) == 1
+    assert len(eng.slot_blocks[0]) == 1      # ceil(6/8): prompt only
+    eng.run([])                              # drain the active slot
+    assert eng.metrics["blocks_grown"] == 2  # grew at len 8 and len 16
+    assert eng.pool.used == 0
+    assert eng.pool.available == eng.pool.total
+
+
+def test_paged_admission_counts_only_callers_requests(stack):
+    """add_requests returns how many of the CALLER's requests were taken
+    even when preempted requests re-admit first."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        paged=True, block_size=4, num_blocks=4)
+    first = _reqs(cfg, [4, 4], max_new=8)
+    eng.add_requests(list(first))
+    while eng.metrics["preemptions"] == 0 and eng.active:
+        eng.step()                           # run until the stall evicts one
+    assert eng.waiting == 1
+    late = _reqs(cfg, [4], max_new=2, seed=9)
+    # pool is stalled: the preempted request resumes first; the caller's
+    # request is only counted when IT is admitted
+    n = eng.add_requests(list(late))
+    assert n in (0, 1)
+    done = eng.run(late[n:])
+    assert eng.metrics["completed"] == 3 or len(done) >= 1

@@ -185,6 +185,110 @@ def test_deadline_rejects_expired_at_submit(engine_factory):
     assert not s.queue
 
 
+# ------------------------------------------------- paged pool integration
+@pytest.fixture(scope="module")
+def paged_factory():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jax.numpy.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def make(batch=4, max_seq=64, block_size=8, num_blocks=None):
+        return ServingEngine(model, params, batch_size=batch,
+                             max_seq=max_seq, paged=True,
+                             block_size=block_size,
+                             num_blocks=num_blocks), cfg
+    return make
+
+
+def test_fill_is_gated_on_pool_blocks(paged_factory):
+    """Free slots alone no longer admit: with a near-empty pool the fill
+    loop stops at the first request the pool cannot hold, and the
+    blocked head is served once blocks free up."""
+    eng, cfg = paged_factory(batch=8, num_blocks=5)   # 4 blocks, 8 slots
+    s = Scheduler(eng)
+    for r in _reqs(cfg, [5, 5, 5, 5, 5], max_new=3):
+        assert s.submit(r)
+    s.tick()
+    assert eng.active == 3                   # 3 x 1 block + 1 reserve
+    assert len(s.queue) == 2                 # head waits, order preserved
+    done = s.drain()
+    assert s.stats.completed == 5
+    assert [r.rid for r in done][-2:] == [3, 4]
+
+
+def test_unservable_prompt_rejected_at_submit_paged(paged_factory):
+    """A prompt needing more blocks than the whole pool can never run."""
+    eng, cfg = paged_factory(batch=2, max_seq=64, num_blocks=3)  # 2 blocks
+    s = Scheduler(eng)
+    (big,) = _reqs(cfg, [40], max_new=2)     # 5 blocks of 8 > pool 2
+    assert not s.submit(big)
+    assert s.stats.rejected == 1
+
+
+def test_memory_pressure_sheds_lowest_priority(paged_factory):
+    """Shedding fires on MEMORY pressure: slots are free, blocks are
+    not — the backlog is trimmed lowest-priority-first to what the pool
+    can still hold."""
+    eng, cfg = paged_factory(batch=8, num_blocks=5)   # 4 blocks
+    s = Scheduler(eng, policy="priority", pressure_shed=0.5)
+    reqs = _reqs(cfg, [5] * 6, max_new=3)
+    reqs[4].priority = 7
+    reqs[5].priority = 3
+    for r in reqs:
+        assert s.submit(r)
+    done = s.tick()                          # admits 3 (1 block each + spare)
+    assert eng.memory_pressure() >= 0.5
+    done += s.tick()                         # pressure >= threshold: shed
+    # priority picks admitted rid4 (pri 7), rid5 (pri 3), rid0 first;
+    # free pool = 1 block -> the tier-0 backlog [1, 2, 3] is trimmed
+    # latest-arrival-first until its demand fits: rid3 and rid2 shed
+    assert s.stats.shed == 2
+    assert {r.rid for r in s.shed_requests} == {2, 3}
+    done += s.drain()
+    assert s.stats.completed == 4
+    assert {r.rid for r in done} == {0, 1, 4, 5}
+
+
+def test_memory_pressure_shed_disabled_by_default(paged_factory):
+    eng, cfg = paged_factory(batch=8, num_blocks=5)
+    s = Scheduler(eng, policy="priority")    # no pressure_shed
+    for r in _reqs(cfg, [5] * 6, max_new=2):
+        assert s.submit(r)
+    done = s.drain()
+    assert s.stats.shed == 0 and s.stats.completed == 6
+
+
+def test_drain_readmits_engine_preempted_requests(paged_factory):
+    """Regression: a request preempted inside the engine (total stall)
+    must be re-admitted by the scheduler even after its own queue has
+    drained — tick() used to skip add_requests on an empty batch and
+    drain() would spin forever on engine.waiting."""
+    eng, cfg = paged_factory(batch=2, block_size=4, num_blocks=4)  # 3 blocks
+    s = Scheduler(eng)
+    reqs = _reqs(cfg, [4, 4], max_new=8)     # forces a total stall
+    for r in reqs:
+        assert s.submit(r)
+    done = s.drain()
+    assert len(done) == 2
+    assert eng.metrics["preemptions"] >= 1
+    assert all(len(r.out_tokens) == 8 for r in reqs)
+    assert eng.waiting == 0 and eng.active == 0
+
+
+def test_pool_occupancy_visible_to_scheduler(paged_factory):
+    eng, cfg = paged_factory(batch=4)
+    s = Scheduler(eng)
+    assert eng.memory_pressure() == 0.0
+    for r in _reqs(cfg, [5, 5], max_new=3):
+        s.submit(r)
+    s.tick()
+    assert 0.0 < eng.memory_pressure() < 1.0
+    assert eng.pool_stats()["used"] == 2
+    s.drain()
+    assert eng.memory_pressure() == 0.0
+
+
 def test_slo_miss_counted(engine_factory):
     eng, cfg = engine_factory(batch=1)
     s = Scheduler(eng, policy="fifo")        # fifo still tracks SLO stats
