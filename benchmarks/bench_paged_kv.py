@@ -1,4 +1,5 @@
-"""Paged KV block pool vs fixed stripes at EQUAL device KV memory.
+"""Paged KV block pool vs fixed stripes at EQUAL device KV memory —
+plus the prefix-sharing scenario.
 
 The fixed-stripe engine reserves a full ``max_seq`` stripe per slot, so
 its concurrency is ``B = kv_tokens / max_seq`` no matter how short the
@@ -7,8 +8,18 @@ shared block pool; a request holds ``ceil(len / block_size)`` blocks, so
 a mixed-length short-prompt workload packs many more requests into the
 same memory. This bench serves one workload through both layouts and
 reports the **max concurrent in-flight requests** each sustains — the
-tentpole's headline number (checked >= 2x) — plus steps-to-drain,
+paged-KV headline number (checked >= 2x) — plus steps-to-drain,
 decode-step latency, and the bit-exactness cross-check between layouts.
+
+The ``--shared-prefix`` scenario (also part of the default run) serves
+N requests with a common K-token prefix — the template-driven
+extraction shape: same instruction preamble, different document tail —
+through a sharing engine and a sharing-disabled one, and reports
+**prefill tokens actually computed** (checked >= 2x fewer with sharing)
+and **steady-state blocks used** (the shared prefix is resident once),
+with the token streams checked identical.
+
+    PYTHONPATH=src python -m benchmarks.bench_paged_kv [--shared-prefix]
 """
 from __future__ import annotations
 
@@ -123,3 +134,103 @@ def run(report) -> None:
     report.row("paged_kv.pool_occupancy_after_drain",
                paged.pool_stats()["occupancy"], "frac",
                "all blocks returned")
+
+    run_shared_prefix(report, model, params, cfg)
+
+
+# ------------------------------------------------------- prefix sharing
+N_SHARED = 8           # requests with a common prefix
+PREFIX_LEN = 48        # the shared template prefix (3 x BLOCK)
+SUFFIX_LEN = 4         # per-request distinct tail
+SHARED_MAX_NEW = 6
+
+
+def _shared_prefix_workload(cfg, seed=3):
+    rng = jax.random.key(seed)
+    rng, k = jax.random.split(rng)
+    common = jax.random.randint(k, (PREFIX_LEN,), 2, cfg.vocab_size).tolist()
+    out = []
+    for i in range(N_SHARED):
+        rng, k = jax.random.split(rng)
+        sfx = jax.random.randint(k, (SUFFIX_LEN,), 2,
+                                 cfg.vocab_size).tolist()
+        out.append(Request(rid=i, prompt=common + sfx,
+                           max_new_tokens=SHARED_MAX_NEW))
+    return out
+
+
+def _serve_tracking_blocks(eng, reqs):
+    pending = list(reqs)
+    peak_blocks = 0
+    while pending or eng.active or eng.waiting or eng._finished_at_admit:
+        n = eng.add_requests(pending)
+        del pending[:n]
+        peak_blocks = max(peak_blocks, eng.pool.used)
+        eng.step()
+    return peak_blocks
+
+
+def run_shared_prefix(report, model=None, params=None, cfg=None) -> None:
+    """N same-prefix requests through sharing vs no-sharing engines."""
+    if model is None:
+        cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                                  dtype=jnp.float32)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+
+    engines = {
+        name: ServingEngine(model, params, batch_size=N_SHARED,
+                            max_seq=MAX_SEQ, paged=True, block_size=BLOCK,
+                            prefix_sharing=share)
+        for name, share in (("unshared", False), ("shared", True))
+    }
+    workloads = {name: _shared_prefix_workload(cfg) for name in engines}
+    peaks = {name: _serve_tracking_blocks(eng, workloads[name])
+             for name, eng in engines.items()}
+
+    total_prompt = N_SHARED * (PREFIX_LEN + SUFFIX_LEN)
+    report.row("paged_kv.shared_prefix.requests", N_SHARED, "requests",
+               f"common {PREFIX_LEN}-token prefix + {SUFFIX_LEN}-token "
+               "suffix each")
+    computed = {name: eng.metrics["prefill_tokens_computed"]
+                for name, eng in engines.items()}
+    for name in engines:
+        report.row(f"paged_kv.shared_prefix.prefill_tokens.{name}",
+                   computed[name], "tokens",
+                   f"of {total_prompt} total prompt tokens")
+        report.row(f"paged_kv.shared_prefix.steady_state_blocks.{name}",
+                   peaks[name], "blocks", "peak pool blocks in use")
+    report.row("paged_kv.shared_prefix.tokens_reused",
+               engines["shared"].metrics["prefill_tokens_shared"], "tokens",
+               "prompt tokens served from resident blocks")
+    ratio = computed["unshared"] / max(computed["shared"], 1)
+    report.row("paged_kv.shared_prefix.prefill_reduction", round(ratio, 2),
+               "x", "prefill tokens computed, unshared / shared")
+    report.check("prefix sharing computes >= 2x fewer prefill tokens",
+                 ratio >= 2.0,
+                 f"{computed['unshared']} vs {computed['shared']} tokens "
+                 f"({ratio:.1f}x)")
+    report.check("prefix sharing uses fewer steady-state blocks",
+                 peaks["shared"] < peaks["unshared"],
+                 f"{peaks['shared']} vs {peaks['unshared']} peak blocks")
+    ok = all(a.out_tokens == b.out_tokens
+             for a, b in zip(workloads["shared"], workloads["unshared"]))
+    report.check("shared-prefix token streams == unshared streams", ok,
+                 f"{N_SHARED} requests compared")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.report import Report
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run only the prefix-sharing scenario")
+    args = ap.parse_args()
+    rep = Report(verbose=True)
+    if args.shared_prefix:
+        run_shared_prefix(rep)
+    else:
+        run(rep)
+    raise SystemExit(1 if rep.n_failed else 0)

@@ -15,7 +15,8 @@ validating the paper's claims. Exit code 1 if any check fails.
 | bench_multimodel  | TPU adaptation: mesh space-sharing                |
 | bench_kernels     | Pallas kernel correctness + analytic intensity    |
 | bench_serving     | slot-native engine: device admission vs host copy |
-| bench_paged_kv    | paged KV pool: concurrency at equal KV memory     |
+| bench_paged_kv    | paged KV pool: concurrency at equal KV memory,    |
+|                   | prefix sharing: prefill tokens actually computed  |
 | bench_roofline    | §Roofline over the 40 dry-run artifacts           |
 | bench_extraction  | end-to-end extraction quality (trains the stack)  |
 """

@@ -1,0 +1,211 @@
+"""Paged single-token GQA decode attention for TPU.
+
+The serving engine's KV lives in a shared block pool
+``(num_blocks, block_size, Hkv, hd)`` per layer, and each slot maps its
+logical positions through a per-slot block table (``repro.serve.blocks``).
+The portable jnp path (`attention.paged_decode_attention`) *gathers* each
+row's blocks into a transient ``(B, max_blocks*bs)`` buffer before the
+attention math — O(B x max_seq) of extra HBM traffic per layer per step.
+
+This kernel reads the pool **in place**: the block table and per-row
+lengths ride in as scalar-prefetch operands (SMEM), and the K/V
+BlockSpec index maps dereference the table, so each grid step DMAs
+exactly one physical block from the pool into VMEM. Nothing is
+materialized per-row; the only per-step HBM traffic is the blocks a row
+actually owns (plus masked-off scratch for table tails).
+
+Grid (B, Hkv, max_blocks): all G = Hq/Hkv query heads of one KV head are
+processed together as a (G, hd) tile (same MXU-occupancy trick as
+``decode_attention``), with the block sweep innermost over flash-style
+VMEM accumulators. Rows at different lengths mask per-row via the
+prefetched ``lengths`` vector — ragged continuous batching needs no
+padding and no HBM mask tensor.
+
+Emits (out, lse) so sequence-sharded pools can merge partials with the
+same closed-form LSE combine as the stripe decode kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+NEG_INF = float("-inf")
+
+
+def _rescale_accumulate(p, alpha, v, acc, *, deterministic: bool):
+    """One flash-attention accumulate step as a SINGLE contraction.
+
+    acc (G, hd+1) carries the output accumulator in [:, :hd] and the
+    softmax denominator in [:, hd]. The classic update
+    ``alpha * acc + [p @ v, sum(p)]`` leaves XLA free to seed the dot's
+    reduction with the rescaled addend (FMA / accumulator-init fusion),
+    which rounds differently per compilation context — the one freedom
+    that broke bit-exactness between the compiled kernel and its jnp
+    oracle. Folding the rescale into the matmul removes the seeding:
+
+        [p | diag(alpha)] @ [[v | 1], [acc]]
+
+    is ONE (G, bs+G) x (bs+G, hd+1) contraction — every product
+    (including ``alpha_g * acc_g``) enters the same reduction, and the
+    denominator column rides along for free.
+
+    ``deterministic`` (the interpret/oracle mode) additionally pins the
+    rounding order: the contraction is lowered as a broadcast multiply
+    into an ``_exact_sum`` add chain instead of a ``dot_general`` (whose
+    small-shape emitter reassociates per context). The compiled TPU
+    path keeps the plain ``dot_general`` (MXU) — bit-parity across
+    hardware is meaningless anyway.
+    """
+    G = p.shape[0]
+    p_aug = jnp.concatenate(
+        [p, jnp.where(jnp.eye(G, dtype=bool), alpha, 0.0)], axis=1)
+    v_aug = jnp.concatenate(
+        [jnp.concatenate([v, jnp.ones((v.shape[0], 1), jnp.float32)],
+                         axis=1), acc], axis=0)
+    if not deterministic:
+        return jax.lax.dot_general(p_aug, v_aug, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    return _exact_sum(p_aug[:, :, None] * v_aug[None, :, :], 1)
+
+
+def _exact_sum(x, axis: int):
+    """Sum with ONE defined rounding order: a sequential ``lax.scan``
+    chain of plain adds. An XLA ``reduce`` leaves the backend free to
+    split the reduction loop into partial accumulators (reassociation)
+    or lower a minor-axis reduce as a horizontal SIMD tree — both
+    context-dependent orders that show up as kernel-vs-oracle ulp
+    drift. IEEE adds are exactly rounded, so a fixed-order add chain
+    yields the same bits under any codegen of the adds themselves."""
+    xs = jnp.moveaxis(x, axis, 0)
+    total, _ = jax.lax.scan(lambda c, t: (c + t, None),
+                            jnp.zeros_like(xs[0]), xs)
+    return total
+
+
+def _p_and_alpha(s, mask, m_prev, m_safe):
+    """Softmax weights p = exp(s - m_safe) and rescale alpha =
+    exp(m_prev - m_safe) out of ONE (G, bs+1) exp op. Besides saving a
+    transcendental launch, this narrows a determinism gap: a lone
+    (G, 1)-shaped exp was observed to compile differently depending on
+    unrelated ops elsewhere in the module (vector-vs-scalar codegen of
+    the polynomial), while the wide exp is far more stable — one shared
+    op means p and alpha can't round apart from each other."""
+    z = jnp.concatenate([s, m_prev], axis=1) - m_safe        # (G, bs+1)
+    e = jnp.exp(z)
+    p = jnp.where(mask, e[:, :-1], 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), e[:, -1:], 0.0)
+    return p, alpha
+
+
+def _qk_scores(q, k, scale: float, *, deterministic: bool):
+    """Masked-score contraction q (G, hd) x k (bs, hd) -> (G, bs).
+    Same determinism split as ``_rescale_accumulate``: ``dot_general``
+    for the compiled TPU path; a broadcast multiply feeding an
+    ``_exact_sum`` add chain for the interpret/oracle mode."""
+    if not deterministic:
+        return jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32) * scale
+    return _exact_sum(q[:, None, :] * k[None, :, :], 2) * scale
+
+
+def _paged_decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         lse_ref, acc_ref, m_ref, *, scale: float,
+                         bs: int, window: int, n_blocks: int,
+                         deterministic: bool):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    n_valid = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = _qk_scores(q, k, scale, deterministic=deterministic)
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < n_valid
+    if window:
+        mask &= kpos >= n_valid - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p, alpha = _p_and_alpha(s, mask, m_prev, m_safe)
+    acc_ref[...] = _rescale_accumulate(p, alpha, v, acc_ref[...],
+                                       deterministic=deterministic)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _write():
+        l = jnp.maximum(acc_ref[:, -1:], 1e-30)
+        o_ref[0, 0] = (acc_ref[:, :-1] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_safe + jnp.log(l))[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("sliding_window", "interpret"))
+def paged_decode_attention(q, pool_k, pool_v, block_table, lengths, *,
+                           sliding_window: int = 0, interpret: bool = True):
+    """q (B,Hq,hd); pool_k/pool_v (num_blocks, bs, Hkv, hd);
+    block_table (B, max_blocks) int32; lengths (B,) int32 valid tokens
+    per row (the new token's K/V already scattered into its block).
+    Returns (out (B,Hq,hd) in q.dtype, lse (B,Hq) f32)."""
+    B, Hq, hd = q.shape
+    bs, Hkv = pool_k.shape[1], pool_k.shape[2]
+    G = Hq // Hkv
+    max_blocks = block_table.shape[1]
+    qg = q.reshape(B, Hkv, G, hd)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=1.0 / (hd ** 0.5),
+                               bs=bs, window=sliding_window,
+                               n_blocks=max_blocks, deterministic=interpret)
+
+    # The index maps receive the scalar-prefetch refs after the grid
+    # indices: K/V tiles are addressed *through the block table*, so the
+    # pool is read in place — physical block table[b, j] is the (b, ., j)
+    # step's tile, whatever pool slot it landed in at admission time.
+    flat_table = block_table.reshape(-1).astype(jnp.int32)
+
+    def kv_map(b, h, j, table, lens):
+        return (table[b * max_blocks + j], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, j, *_: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, hd + 1), jnp.float32),    # acc | denominator
+            pltpu.VMEM((G, 1), jnp.float32),         # running max
+        ],
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(flat_table, jnp.asarray(lengths, jnp.int32).reshape(-1), qg,
+      pool_k, pool_v)
+    return out.reshape(B, Hq, hd), lse.reshape(B, Hq)

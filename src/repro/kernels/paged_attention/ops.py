@@ -1,0 +1,33 @@
+"""Public op for paged decode attention (block-table in-place reads).
+
+On TPU the Pallas kernel runs compiled; everywhere else it runs in
+interpret mode so the *same* kernel body is what CI exercises — the
+differential grid in ``tests/test_kernels.py`` holds it bit-exact (f32)
+against ``ref.paged_decode_attention_ref`` and tolerance-close to the
+independent gather oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention as _kernel)
+from repro.kernels.paged_attention.ref import (gathered_decode_ref,
+                                               paged_decode_attention_ref)
+
+__all__ = ["paged_decode_attention", "paged_decode_attention_ref",
+           "gathered_decode_ref"]
+
+
+def paged_decode_attention(q, pool_k, pool_v, block_table, lengths, *,
+                           sliding_window: int = 0, force_ref: bool = False):
+    """q (B,Hq,hd); pool_k/pool_v (num_blocks, bs, Hkv, hd); block_table
+    (B, max_blocks) int32; lengths (B,) valid tokens per row (new token
+    already scattered). Returns (out (B,Hq,hd), lse (B,Hq) f32)."""
+    if force_ref:
+        return paged_decode_attention_ref(q, pool_k, pool_v, block_table,
+                                          lengths,
+                                          sliding_window=sliding_window)
+    on_tpu = jax.default_backend() == "tpu"
+    return _kernel(q, pool_k, pool_v, block_table, lengths,
+                   sliding_window=sliding_window, interpret=not on_tpu)

@@ -155,25 +155,32 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, sliding_window: int = 0):
 
 
 def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
-                           cache_len, *, sliding_window: int = 0):
+                           cache_len, *, sliding_window: int = 0,
+                           use_kernel: bool = False):
     """Decode one token per sequence against a shared KV **block pool**.
 
     q/k_new/v_new: (B, 1, H*, hd); pool_k/pool_v: (num_blocks, bs, Hkv,
     hd); block_table: (B, max_blocks) int32; cache_len: (B,) tokens
     already cached per row. Row b's logical position j lives at
     ``(block_table[b, j // bs], j % bs)`` — the new token's K/V is
-    scattered there first (owned blocks are disjoint across rows, so the
-    scatter never collides; unowned table entries point at the reserved
-    scratch block 0), then each row's effective cache is gathered back
-    through its table row and masked exactly like the stripe path, so
-    the attention math — and therefore the emitted token stream — is
-    unchanged. Returns (out, new_pool_k, new_pool_v).
+    scattered there first (owned blocks are disjoint across rows — with
+    prefix sharing the engine copy-on-writes any shared tail before the
+    step — so the scatter never collides; unowned table entries point at
+    the reserved scratch block 0). Returns (out, new_pool_k, new_pool_v).
 
-    This is the portable jnp reference: the gather materializes
-    (B, max_blocks*bs) K/V transiently. A TPU paged-attention kernel
-    would read through the table in-place; the *resident* memory — the
-    pool — is already block-granular, which is what admission is
-    accounted against.
+    Two read paths behind ``use_kernel``:
+
+    * **False (portable jnp reference)** — gather each row's effective
+      cache through its table row into a transient (B, max_blocks*bs)
+      buffer and run the same masked ``decode_attention`` as the stripe
+      path, so the attention math — and therefore the emitted token
+      stream — is unchanged.
+    * **True (Pallas kernel)** — ``kernels.paged_attention`` reads K/V
+      through the block table *in place* (scalar-prefetched table drives
+      the BlockSpec index maps); no transient gather. Compiled on TPU,
+      interpret mode elsewhere; held bit-exact (f32) against its
+      streaming jnp oracle by the differential grid in
+      ``tests/test_kernels.py``.
     """
     bs = pool_k.shape[1]
     idx = jnp.asarray(cache_len, jnp.int32).reshape(-1)     # (B,)
@@ -182,6 +189,12 @@ def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
     pool_k = pool_k.at[phys, idx % bs].set(k_new[:, 0].astype(pool_k.dtype))
     pool_v = pool_v.at[phys, idx % bs].set(v_new[:, 0].astype(pool_v.dtype))
     B, max_blocks = block_table.shape
+    if use_kernel:
+        from repro.kernels.paged_attention.ops import (
+            paged_decode_attention as _paged_kernel)
+        out, _ = _paged_kernel(q[:, 0], pool_k, pool_v, block_table, idx + 1,
+                               sliding_window=sliding_window)
+        return out.reshape(B, 1, -1), pool_k, pool_v
     gk = pool_k[block_table].reshape(B, max_blocks * bs, *pool_k.shape[2:])
     gv = pool_v[block_table].reshape(B, max_blocks * bs, *pool_v.shape[2:])
     out = decode_attention(q, gk, gv, idx + 1, sliding_window=sliding_window)
@@ -190,7 +203,8 @@ def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
 
 def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
                     positions=None, mrope_positions=None, causal=True,
-                    sliding_window=None, plan=None, block_table=None):
+                    sliding_window=None, plan=None, block_table=None,
+                    paged_kernel=False):
     """Full attention sub-block incl. output proj. Returns (out, new_cache).
 
     cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None — or, with
@@ -221,7 +235,7 @@ def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
             # paged KV: cache leaves are the shared block pool
             o, k_cache, v_cache = paged_decode_attention(
                 q, cache["k"], cache["v"], k, v, block_table, cache_len,
-                sliding_window=win)
+                sliding_window=win, use_kernel=paged_kernel)
         else:
             idx = jnp.asarray(cache_len, jnp.int32)
             if idx.ndim == 0:

@@ -212,7 +212,7 @@ class Model:
 
     # ---------------- decode ----------------
     def decode_step(self, params, token, cache, cache_len, plan=None,
-                    block_table=None):
+                    block_table=None, paged_kernel: bool = False):
         """token (B,1) int32; cache_len = existing token count — a scalar
         (all rows at one length) or a (B,) vector (per-slot lengths for
         mixed-length continuous batching); the new token is written at
@@ -222,13 +222,16 @@ class Model:
         cache leaves are then a shared block pool (L, num_blocks,
         block_size, Hkv, hd) and row b's logical position j resolves to
         (block_table[b, j // block_size], j % block_size). Requires a
-        (B,) cache_len vector."""
+        (B,) cache_len vector. ``paged_kernel`` switches the paged read
+        from the transient jnp gather to the in-place Pallas kernel
+        (``kernels.paged_attention``; interpret mode off-TPU)."""
         cfg = self.cfg
         B = token.shape[0]
         x = _embed_tokens(params, cfg, token)
         extras = {"cache_len": cache_len}
         if block_table is not None:
             extras["block_table"] = jnp.asarray(block_table, jnp.int32)
+            extras["paged_kernel"] = bool(paged_kernel)
         if cfg.rope == "learned":
             x = x + layers.sinusoidal_pos(
                 jnp.reshape(cache_len, (-1, 1)), cfg.d_model, x.dtype)

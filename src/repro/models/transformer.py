@@ -90,7 +90,8 @@ def apply_block(x, p, cfg, *, kind, mode, cache=None, extras=None, plan=None):
         cache_len=extras.get("cache_len"),
         positions=extras.get("positions"),
         mrope_positions=extras.get("mrope_positions"), plan=plan,
-        block_table=extras.get("block_table"))
+        block_table=extras.get("block_table"),
+        paged_kernel=extras.get("paged_kernel", False))
 
     if kind == "hybrid":
         scache = None if cache is None else {"state": cache["ssm_state"]}

@@ -22,6 +22,22 @@ sequence). KV memory comes in two layouts:
   there; the stripe path is also the reference the paged path must
   match token-for-token.
 
+Paged engines add two behaviours on top of the block tables:
+
+* **Prefix sharing + copy-on-write** (``prefix_sharing=True``, non-MoE):
+  admission walks the prompt through the pool's prefix index and
+  *acquires* blocks already holding that content instead of recomputing
+  and re-storing them — the request prefills only its un-shared suffix
+  (fed through ordinary decode steps), and the scheduler's block gate
+  charges only that post-sharing cost. A shared block is read-only;
+  the first append into a shared tail duplicates it on device first
+  (copy-on-write), so no holder ever sees another's tokens.
+* **In-place kernel decode** (``use_kernel=True``): the paged attention
+  read runs the Pallas kernel in ``kernels/paged_attention`` (K/V read
+  through the block table via scalar-prefetched index maps, no
+  transient gather; interpret mode off-TPU) instead of the jnp gather
+  reference.
+
 Three properties carry over from the stripe engine and hold in both
 layouts:
 
@@ -94,7 +110,8 @@ class ServingEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, plan=None, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
-                 reserve_blocks: int = 1):
+                 reserve_blocks: int = 1, prefix_sharing: bool = True,
+                 use_kernel: bool = False):
         self.model = model
         self.params = params
         self.B = batch_size
@@ -117,8 +134,19 @@ class ServingEngine:
         if self.paged and not pure_attn:
             raise ValueError("paged KV requires a pure-attention {k, v} "
                              f"cache; got leaves {sorted(cache_spec)}")
+        # prefix sharing rides on the block tables; the catch-up tokens of
+        # a shared admission decode co-batched, which is bit-exact for
+        # dense/GQA but not for MoE (the shared expert-capacity caveat
+        # again) — so MoE engines never share.
+        self.prefix_sharing = bool(prefix_sharing) and self.paged \
+            and not is_moe
+        self.use_kernel = bool(use_kernel)
         self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
         self.slot_req: list = [None] * batch_size
+        # prompt tokens a shared admission still owes the model: fed one
+        # per decode step (writing K/V at the slot's own position) until
+        # the last prompt token's logits produce the first output token
+        self.slot_pending: list = [[] for _ in range(batch_size)]
         self._finished_at_admit: list = []
         self._used_slots: set = set()
         self._waiting: deque = deque()       # preempted, awaiting re-admission
@@ -196,22 +224,44 @@ class ServingEngine:
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return nxt, caches
 
+        kernel_flag = self.use_kernel
+
         def decode_paged(p, tok, caches, lengths, table):
             logits, caches = model.decode_step(p, tok, caches, lengths, plan,
-                                               block_table=table)
+                                               block_table=table,
+                                               paged_kernel=kernel_flag)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return nxt, caches
+
+        def copy_block(caches, src, dst):
+            """Copy-on-write: duplicate physical block ``src`` into the
+            freshly-allocated ``dst`` on device (all layers, one jitted
+            dynamic_update_slice per leaf, pool donated)."""
+            for key in caches:
+                nd = caches[key].ndim
+                sizes = (caches[key].shape[0], 1) + caches[key].shape[2:]
+                blk = jax.lax.dynamic_slice(
+                    caches[key], (jnp.int32(0), src) + (jnp.int32(0),)
+                    * (nd - 2), sizes)
+                caches[key] = jax.lax.dynamic_update_slice(
+                    caches[key], blk,
+                    (jnp.int32(0), dst) + (jnp.int32(0),) * (nd - 2))
+            return caches
 
         self._admit = jax.jit(admit, donate_argnums=(1,))
         self._prefill_paged = jax.jit(prefill_paged)
         self._write_block = jax.jit(write_block, donate_argnums=(0,))
+        self._copy_block = jax.jit(copy_block, donate_argnums=(0,))
         self._decode = jax.jit(decode_paged if self.paged else decode,
                                donate_argnums=(2,))
         self.metrics = {"prefills": 0, "prefill_batches": 0,
                         "decode_steps": 0, "completed": 0,
                         "stop_token_exits": 0, "slot_reuses": 0,
                         "blocks_grown": 0, "parked_slot_steps": 0,
-                        "preemptions": 0}
+                        "preemptions": 0, "shared_admissions": 0,
+                        "cow_copies": 0, "cow_parks": 0,
+                        "prefill_tokens_computed": 0,
+                        "prefill_tokens_shared": 0}
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -241,9 +291,49 @@ class ServingEngine:
         tokens already generated before a preemption evicted the slot."""
         return req.prompt + req.out_tokens
 
+    def _match_cost(self, eff: list):
+        """Resident prefix match for ``eff`` and the admission cost with
+        it: ``(blocks, matched, need)``. ``need`` counts the un-shared
+        blocks plus ONE extra when the match ends inside a partial tail
+        block — the first append must copy-on-write that block, so the
+        gate has to charge the copy up front or a batch of tail-sharing
+        admissions would all park on their first decode step.
+
+        A match is only *used* when the un-shared suffix is small —
+        ``P - m <= max(block_size, m)`` — because the suffix is fed one
+        token per decode step: sharing a 16-token preamble in front of a
+        240-token document would trade one batched prefill for 240
+        serial catch-up steps. Bounding the suffix by the matched length
+        keeps the catch-up cost no larger than the prefill compute the
+        match saves (chunked prefill of the suffix is the listed
+        follow-up that removes the trade entirely)."""
+        P = len(eff)
+        full = self.pool.blocks_for(P)
+        blocks, m = self.pool.match(eff, P - 1)
+        if m < self.block_size or P - m > max(self.block_size, m):
+            return [], 0, full
+        need = full - len(blocks)
+        if m % self.block_size:
+            need += 1                    # imminent CoW of the shared tail
+        return blocks, m, need
+
     def blocks_needed(self, req: Request) -> int:
-        """Pool blocks this request's admission requires (0 when not
-        paged — stripe admission is gated on free slots alone)."""
+        """Pool blocks this request's admission requires right now — the
+        **post-sharing** cost: blocks covered by a resident prefix match
+        are already paid for (reusing them is free; a shared partial
+        tail charges its imminent copy-on-write block). (0 when not
+        paged — stripe admission is gated on free slots alone.)"""
+        if not self.paged:
+            return 0
+        eff = self._eff_prompt(req)
+        if self.prefix_sharing:
+            return self._match_cost(eff)[2]
+        return self.pool.blocks_for(len(eff))
+
+    def blocks_worst_case(self, req: Request) -> int:
+        """Upper bound on the request's block demand, independent of what
+        happens to be resident — the "can this EVER be served" gate (a
+        prefix match can vanish before a preempted re-admission)."""
         if not self.paged:
             return 0
         return self.pool.blocks_for(len(self._eff_prompt(req)))
@@ -251,19 +341,22 @@ class ServingEngine:
     def blocks_available(self) -> int | None:
         return self.pool.available if self.paged else None
 
+    def _admit_ok(self, need: int, planned: int) -> bool:
+        avail = self.pool.available - planned
+        if need + self.reserve_blocks <= avail:
+            return True
+        return self.active == 0 and planned == 0 and need <= avail
+
     def can_admit(self, req: Request, planned_blocks: int = 0) -> bool:
         """Would admission succeed right now, with ``planned_blocks``
         already promised to earlier picks? Stripe engines admit whenever
         a slot is free; paged engines additionally demand blocks for the
-        prompt plus ``reserve_blocks`` of decode-growth headroom (waived
-        when the engine is idle — an empty pool has nothing to protect)."""
+        prompt (at the post-sharing cost) plus ``reserve_blocks`` of
+        decode-growth headroom (waived when the engine is idle — an
+        empty pool has nothing to protect)."""
         if not self.paged:
             return True
-        need = self.blocks_needed(req)
-        avail = self.pool.available - planned_blocks
-        if need + self.reserve_blocks <= avail:
-            return True
-        return self.active == 0 and planned_blocks == 0 and need <= avail
+        return self._admit_ok(self.blocks_needed(req), planned_blocks)
 
     def memory_pressure(self) -> float:
         """Fraction of KV memory in use: pool occupancy when paged, slot
@@ -277,6 +370,11 @@ class ServingEngine:
             return {"paged": False, "slots": self.B, "active": self.active,
                     "occupancy": self.memory_pressure()}
         return {"paged": True, "waiting": len(self._waiting),
+                # logical view: table entries across slots. With prefix
+                # sharing this exceeds ``used`` — the physical count —
+                # because a shared block is counted once by the pool
+                # however many tables map it.
+                "logical_blocks": sum(len(b) for b in self.slot_blocks),
                 **self.pool.stats()}
 
     # --------------------------------------------------------- admission
@@ -284,12 +382,56 @@ class ServingEngine:
         """Prefill into a free slot; False if engine is full."""
         return self.add_requests([req]) == 1
 
+    def _sim_chains(self, eff: list, sim: set) -> None:
+        """Record the prefix chains a plain (prefilled) admission will
+        register, for in-batch match simulation."""
+        bs = self.block_size
+        for i in range(self.pool.blocks_for(len(eff))):
+            sim.add(tuple(eff[:min((i + 1) * bs, len(eff))]))
+
+    def _sim_match(self, eff: list, max_len: int, sim: set) -> int:
+        """Matched length against the union of the real prefix index and
+        the chains earlier same-batch plain admissions will register.
+        Once the walk leaves the real chain for a sim-promised chunk it
+        stays sim-only (the source's later blocks will chain off the
+        same canonical prefix, resolved at insertion time)."""
+        bs = self.block_size
+        pos = 0
+        parent = self.pool.ROOT
+        while pos + bs <= max_len:
+            if tuple(eff[:pos + bs]) in sim:
+                parent = False               # sim-only from here on
+            else:
+                if parent is False:
+                    break
+                b = self.pool.lookup(parent, tuple(eff[pos:pos + bs]))
+                if b is None:
+                    break
+                parent = b
+            pos += bs
+        if pos < max_len:
+            # partial tail: a sim chain extending past max_len also covers
+            # it (the registered block holds at least these tokens)
+            tail = tuple(eff[pos:max_len])
+            if (parent is not False
+                    and self.pool.lookup(parent, tail, partial=True)
+                    is not None) \
+                    or any(c[:max_len] == tuple(eff[:max_len])
+                           and len(c) >= max_len for c in sim):
+                return max_len
+        return pos
+
     def add_requests(self, reqs: list) -> int:
         """Admit as many of ``reqs`` (in order, behind any preempted
         requests awaiting re-admission) as free slots AND pool blocks
-        allow, prefilling each shape-compatible group as ONE batched call
-        whose slot insertion happens on device. Returns how many of the
-        *caller's* requests were admitted (a prefix of ``reqs``)."""
+        allow. Plain admissions prefill each shape-compatible group as
+        ONE batched call whose slot insertion happens on device; with
+        prefix sharing, a request whose prompt prefix is resident (or is
+        being prefilled by an earlier member of this very batch) skips
+        prefill for the shared blocks — it acquires them and owes only
+        its un-shared suffix, fed through the normal decode steps.
+        Returns how many of the *caller's* requests were admitted (a
+        prefix of ``reqs``)."""
         for r in reqs:
             if len(r.prompt) > self.max_seq:
                 raise ValueError(f"request {r.rid}: prompt length "
@@ -299,13 +441,16 @@ class ServingEngine:
                 raise ValueError(f"request {r.rid}: prompt needs "
                                  f"{self.pool.blocks_for(len(r.prompt))} "
                                  f"blocks > pool total {self.pool.total}")
-        free = self.free_slots()
+        slots_avail = self.free_slots()
         cand = list(self._waiting) + list(reqs)
-        take, planned = [], 0
+        take: list = []          # (req, slot, acquired-blocks | None)
+        planned = 0
+        sim: set = set()         # chains this batch's plain members add
         for r in cand:
-            if len(take) >= len(free):
+            if len(take) >= len(slots_avail):
                 break
-            P = len(self._eff_prompt(r))
+            eff = self._eff_prompt(r)
+            P = len(eff)
             if P > self.max_seq:
                 # a preempted request regrew past capacity: it cannot be
                 # re-prefilled — finish it as capacity-truncated
@@ -314,20 +459,50 @@ class ServingEngine:
                 self._finished_at_admit.append(r)
                 self._waiting.remove(r)
                 continue
+            slot = slots_avail[len(take)]
+            acquired = None
+            matched = 0
             if self.paged:
-                if not self.can_admit(r, planned):
+                need = self.pool.blocks_for(P)
+                if self.prefix_sharing:
+                    blocks, m, cost = self._match_cost(eff)
+                    if m >= self.block_size:
+                        acquired, matched, need = list(blocks), m, cost
+                    else:
+                        m_sim = self._sim_match(eff, P - 1, sim)
+                        if m_sim >= self.block_size \
+                                and P - m_sim <= max(self.block_size,
+                                                     m_sim):
+                            # an earlier member of this batch prefills the
+                            # prefix: plan at the post-sharing cost and
+                            # resolve the real blocks at insertion time
+                            acquired = []
+                            need -= self.pool.blocks_for(m_sim)
+                            if m_sim % self.block_size:
+                                need += 1          # its CoW, like above
+                if not self._admit_ok(need, planned):
                     break            # in-order admission: head waits
-                planned += self.pool.blocks_for(P)
-            take.append(r)
+                planned += need
+                if acquired:
+                    for b in acquired:
+                        # commit the match now: holding a reference keeps
+                        # the blocks resident (and indexed) however the
+                        # rest of this batch retires or frees
+                        self.pool.acquire(b, owner=slot)
+                if acquired is None and self.prefix_sharing:
+                    self._sim_chains(eff, sim)
+            take.append((r, slot, acquired, matched))
         n_from_waiting = 0
-        for r in take:
+        for r, _, _, _ in take:
             if self._waiting and self._waiting[0] is r:
                 self._waiting.popleft()
                 n_from_waiting += 1
         if not take:
             return 0
+        # ---- plain admissions first: batched prefill per shape group
+        plain = [(r, s) for r, s, acq, _ in take if acq is None]
         groups: dict = {}
-        for n, (req, slot) in enumerate(zip(take, self.free_slots())):
+        for n, (req, slot) in enumerate(plain):
             P = len(self._eff_prompt(req))
             if self._solo_prefill:
                 key = (n,)                       # one row per prefill call
@@ -351,8 +526,7 @@ class ServingEngine:
                 nxt, pref = self._prefill_paged(
                     self.params, jnp.asarray(toks), jnp.asarray(last))
                 for j, (req, slot) in enumerate(members):
-                    self._insert_paged(pref, j, slot,
-                                       len(self._eff_prompt(req)))
+                    self._insert_paged(pref, j, slot, self._eff_prompt(req))
             else:
                 nxt, self.caches = self._admit(
                     self.params, self.caches, jnp.asarray(toks),
@@ -369,25 +543,131 @@ class ServingEngine:
                 self._admit_seq += 1
                 self._admit_order[slot] = self._admit_seq
                 self.metrics["prefills"] += 1
+                self.metrics["prefill_tokens_computed"] += P
                 if self._is_done(req):
                     self._retire(slot)
                     self._finished_at_admit.append(req)
             self.metrics["prefill_batches"] += 1
+        # ---- shared admissions after: the whole batch's registrations
+        # are visible, so in-batch prefixes resolve to real blocks
+        for req, slot, acquired, matched in take:
+            if acquired is None:
+                continue
+            self._admit_shared(req, slot, acquired, matched)
         return len(take) - n_from_waiting
 
-    def _insert_paged(self, pref, row: int, slot: int, n_tokens: int) -> None:
+    def _extend_match(self, eff: list, slot: int, blocks: list,
+                      m: int) -> int:
+        """Extend a committed match chain past ``m`` with whatever this
+        batch's prefills registered since planning, acquiring each new
+        block for ``slot``. Never re-walks from the root — the committed
+        chain stays authoritative (a re-walk could diverge onto blocks
+        we hold no references to; see the partial-tail-vs-full-block
+        race). Only a boundary-ended chain can extend."""
+        bs = self.block_size
+        if m % bs or not blocks:
+            return m
+        cap = len(eff) - 1
+        parent = blocks[-1]
+        while m + bs <= cap:
+            b = self.pool.lookup(parent, tuple(eff[m:m + bs]))
+            if b is None or b in blocks:
+                break
+            self.pool.acquire(b, owner=slot)
+            blocks.append(b)
+            parent = b
+            m += bs
+        tail = tuple(eff[m:cap])
+        if tail and m % bs == 0:
+            b = self.pool.lookup(parent, tail, partial=True)
+            if b is not None and b not in blocks:
+                self.pool.acquire(b, owner=slot)
+                blocks.append(b)
+                m += len(tail)
+        return m
+
+    def _admit_shared(self, req: Request, slot: int, acquired: list,
+                      matched: int) -> None:
+        """Admit ``req`` into ``slot`` reusing resident prefix blocks.
+        ``acquired``/``matched`` are the chain committed at planning time
+        (held since, so still resident and indexed); it is extended —
+        never re-walked — with blocks this batch's prefills registered.
+        An empty ``acquired`` is an in-batch promise resolved against
+        the real index here. The un-shared suffix (always >= 1 token:
+        the match is capped at P-1 so the last prompt token's logits are
+        still computed) becomes the slot's pending queue, fed through
+        the ordinary decode steps."""
+        eff = self._eff_prompt(req)
+        P = len(eff)
+        if acquired:
+            blocks = list(acquired)
+            m = self._extend_match(eff, slot, blocks, matched)
+        else:
+            blocks, m, _ = self._match_cost(eff)   # m = 0 if unusable now
+            for b in blocks:
+                self.pool.acquire(b, owner=slot)
+        if m < self.block_size:
+            # in-batch promise broken: the source retired inside this
+            # very batch and took its index entries with it (nothing was
+            # acquired, and the source's freed blocks more than cover a
+            # solo plain prefill)
+            toks = np.asarray([eff], np.int32)
+            last = np.asarray([P - 1], np.int32)
+            nxt, pref = self._prefill_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(last))
+            self._insert_paged(pref, 0, slot, eff)
+            req.out_tokens.append(int(np.asarray(nxt)[0]))
+            self.slot_req[slot] = req
+            self.slot_len[slot] = P
+            self.metrics["prefill_batches"] += 1
+            self.metrics["prefill_tokens_computed"] += P
+        else:
+            self.slot_blocks[slot] = list(blocks)
+            self.block_table[slot, :] = 0
+            self.block_table[slot, :len(blocks)] = blocks
+            self.slot_req[slot] = req
+            self.slot_len[slot] = m
+            self.slot_pending[slot] = list(eff[m:])
+            self.metrics["shared_admissions"] += 1
+            self.metrics["prefill_tokens_shared"] += m
+            self.metrics["prefill_tokens_computed"] += P - m
+        if slot in self._used_slots:
+            self.metrics["slot_reuses"] += 1
+        self._used_slots.add(slot)
+        self._admit_seq += 1
+        self._admit_order[slot] = self._admit_seq
+        self.metrics["prefills"] += 1
+        if self._is_done(req):
+            self._retire(slot)
+            self._finished_at_admit.append(req)
+
+    def _insert_paged(self, pref, row: int, slot: int, eff: list) -> None:
         """Allocate the slot's blocks and scatter its prefill KV into the
-        pool block-by-block (jitted dynamic_update_slice, pool donated)."""
+        pool block-by-block (jitted dynamic_update_slice, pool donated);
+        with sharing on, advertise each block's prompt content in the
+        prefix index so later admissions can reuse it."""
+        n_tokens = len(eff)
         n_blk = self.pool.blocks_for(n_tokens)
         blocks = self.pool.alloc(n_blk, owner=slot)
         assert blocks is not None, "admission accounting let an alloc fail"
         self.slot_blocks[slot] = blocks
         self.block_table[slot, :] = 0
         self.block_table[slot, :n_blk] = blocks
+        bs = self.block_size
+        parent = self.pool.ROOT
         for i, phys in enumerate(blocks):
             self.caches = self._write_block(
                 self.caches, pref, np.int32(row),
-                np.int32(i * self.block_size), np.int32(phys))
+                np.int32(i * bs), np.int32(phys))
+            if parent is not False and self.prefix_sharing:
+                # thread the canonical block as the next link's parent so
+                # duplicate chains converge on one indexed copy; an
+                # unregistrable link ends the chain (False sentinel)
+                parent = self.pool.register(
+                    phys, parent,
+                    tuple(eff[i * bs:min((i + 1) * bs, n_tokens)]))
+                if parent is None:
+                    parent = False
 
     # ------------------------------------------------------------- decode
     def _is_done(self, req: Request) -> bool:
@@ -405,6 +685,7 @@ class ServingEngine:
         req.done_s = time.perf_counter()
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        self.slot_pending[slot] = []
         self._release_blocks(slot)
         self.metrics["completed"] += 1
         if req.finished_by_stop and len(req.out_tokens) < req.max_new_tokens:
@@ -414,28 +695,59 @@ class ServingEngine:
         """Evict a slot under pool exhaustion: free its blocks and queue
         the request for recompute re-admission (its prompt + generated
         tokens prefill again when memory frees — the standard paged-KV
-        preemption, trading recompute for not deadlocking the batch)."""
+        preemption, trading recompute for not deadlocking the batch).
+        Freeing only drops this slot's references: blocks shared with a
+        live slot stay resident for it."""
         req = self.slot_req[slot]
         req.preemptions += 1
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        self.slot_pending[slot] = []
         self._release_blocks(slot)
         self._waiting.append(req)
         self.metrics["preemptions"] += 1
 
     def _grow_or_park(self, active: list) -> list:
-        """Give every active slot a block for its next token; slots the
-        pool cannot serve park (skip this step, state intact). If nobody
-        can advance, preempt newest admissions until the oldest can."""
+        """Make every active slot's next-token write site safe: grow a
+        block at a boundary, **copy-on-write** a shared tail before the
+        scatter would land in it, and drop stale prefix-index entries for
+        in-place writes. Slots the pool cannot serve park (skip this
+        step, state intact). If nobody can advance, preempt newest
+        admissions until the oldest can."""
         def grow(i) -> bool:
-            if self.slot_len[i] // self.block_size < len(self.slot_blocks[i]):
-                return True                     # room in the last block
-            got = self.pool.alloc(1, owner=i)
-            if got is None:
-                return False
-            self.slot_blocks[i].extend(got)
-            self.block_table[i, len(self.slot_blocks[i]) - 1] = got[0]
-            self.metrics["blocks_grown"] += 1
+            bi = int(self.slot_len[i]) // self.block_size
+            if bi >= len(self.slot_blocks[i]):
+                got = self.pool.alloc(1, owner=i)
+                if got is None:
+                    return False
+                self.slot_blocks[i].extend(got)
+                self.block_table[i, len(self.slot_blocks[i]) - 1] = got[0]
+                self.metrics["blocks_grown"] += 1
+                return True
+            b = self.slot_blocks[i][bi]
+            if not self.pool.writable(b):
+                # shared tail: writing in place would corrupt the other
+                # holders' KV — duplicate the block on device, swap our
+                # table entry to the copy, drop our hold on the original
+                got = self.pool.alloc(1, owner=i)
+                if got is None:
+                    # park — and divert this slot's ride-along scatter to
+                    # the scratch block: with the table still naming the
+                    # SHARED block, the parked write would land in it and
+                    # corrupt the other holders' KV (restored below once
+                    # the copy, or sole ownership, arrives)
+                    self.block_table[i, bi] = 0
+                    self.metrics["cow_parks"] += 1
+                    return False
+                self.caches = self._copy_block(self.caches, np.int32(b),
+                                               np.int32(got[0]))
+                self.pool.free([b], owner=i)
+                self.slot_blocks[i][bi] = got[0]
+                self.metrics["cow_copies"] += 1
+                b = got[0]
+            self.block_table[i, bi] = b      # also restores a CoW park
+            self.pool.prepare_write(b, int(self.slot_len[i])
+                                    % self.block_size)
             return True
 
         parked = [i for i in list(active) if not grow(i)]
@@ -486,8 +798,12 @@ class ServingEngine:
             return finished
         tok = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):
-            if r is not None:       # parked rows too: their scatter lands
-                tok[i, 0] = r.out_tokens[-1]    # in the scratch block
+            if r is None:
+                continue            # parked rows too: their scatter lands
+            if self.slot_pending[i]:            # in the scratch block
+                tok[i, 0] = self.slot_pending[i][0]   # catch-up prompt token
+            else:
+                tok[i, 0] = r.out_tokens[-1]
         if self.paged:
             nxt, self.caches = self._decode(
                 self.params, jnp.asarray(tok), self.caches,
@@ -500,8 +816,16 @@ class ServingEngine:
         nxt = np.asarray(nxt)
         for i in active:
             r = self.slot_req[i]
-            r.out_tokens.append(int(nxt[i]))
             self.slot_len[i] += 1
+            if self.slot_pending[i]:
+                # a shared admission catching up on its un-shared prompt
+                # suffix: the fed token was a *prompt* token, so its
+                # logits only matter once the suffix is exhausted — then
+                # the argmax is the first genuinely generated token
+                self.slot_pending[i].pop(0)
+                if self.slot_pending[i]:
+                    continue
+            r.out_tokens.append(int(nxt[i]))
             if self._is_done(r):
                 finished.append(r)
                 self._retire(i)

@@ -31,6 +31,14 @@ trimmed — worst-ranked first (lowest priority / latest deadline / back
 of the queue) — until its total block demand fits what the pool can
 still hold alongside the resident sequences. Slot exhaustion is no
 longer the only shedding trigger; memory is.
+
+Block demand is the engine's ``blocks_needed`` — the **post-sharing**
+cost when prefix sharing is on (a prompt whose prefix is already
+resident only pays for its un-shared suffix), so a queue of
+template-sharing requests is neither over-gated nor over-shed. The
+never-servable check at submit keeps the worst-case bound
+(``blocks_worst_case``): a prefix match may be gone by the time a
+preempted request re-admits.
 """
 from __future__ import annotations
 
@@ -87,7 +95,7 @@ class Scheduler:
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> bool:
         if len(req.prompt) > self.engine.max_seq or \
-                (self.engine.paged and self.engine.blocks_needed(req)
+                (self.engine.paged and self.engine.blocks_worst_case(req)
                  > self.engine.pool.total):
             # unservable: would raise from the engine mid-batch at tick
             # time and take its co-dequeued batchmates down with it

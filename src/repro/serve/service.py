@@ -57,10 +57,10 @@ class LMReplica:
                 raise RequestError(f"{self.name}: prompt length "
                                    f"{len(req.prompt)} > max_seq "
                                    f"{eng.max_seq}")
-            if eng.paged and eng.blocks_needed(req) > eng.pool.total:
+            if eng.paged and eng.blocks_worst_case(req) > eng.pool.total:
                 raise RequestError(f"{self.name}: prompt needs "
-                                   f"{eng.blocks_needed(req)} KV blocks > "
-                                   f"pool total {eng.pool.total}")
+                                   f"{eng.blocks_worst_case(req)} KV blocks "
+                                   f"> pool total {eng.pool.total}")
             if req.deadline_s is not None \
                     and req.deadline_s <= time.perf_counter():
                 raise RequestError(f"{self.name}: deadline already expired")
@@ -84,18 +84,26 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                     with_backup: bool = True, plan=None,
                     paged: bool | None = None, block_size: int = 16,
                     num_blocks: int | None = None,
-                    pressure_shed: float | None = None) -> Service:
+                    pressure_shed: float | None = None,
+                    prefix_sharing: bool = True,
+                    use_kernel: bool = False) -> Service:
     """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
     optionally registered with a Supervisor (started in priority order).
 
     ``paged``/``block_size``/``num_blocks`` configure each replica's KV
     block pool (paged by default for pure-attention families);
-    ``pressure_shed`` arms the scheduler's memory-pressure shedding."""
+    ``pressure_shed`` arms the scheduler's memory-pressure shedding;
+    ``prefix_sharing`` lets admissions reuse resident prompt-prefix
+    blocks copy-on-write (on by default for non-MoE paged engines);
+    ``use_kernel`` switches paged decode from the jnp gather to the
+    in-place Pallas paged-attention kernel (interpret mode off-TPU)."""
     replicas = []
     for i in range(n_replicas):
         eng = ServingEngine(model, params, batch_size=batch_size,
                             max_seq=max_seq, plan=plan, paged=paged,
-                            block_size=block_size, num_blocks=num_blocks)
+                            block_size=block_size, num_blocks=num_blocks,
+                            prefix_sharing=prefix_sharing,
+                            use_kernel=use_kernel)
         sched = Scheduler(eng, policy=policy, max_queue=max_queue,
                           pressure_shed=pressure_shed)
         lm = LMReplica(f"{name}/{i}", sched)

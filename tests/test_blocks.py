@@ -127,6 +127,180 @@ def test_property_no_block_double_owned(ops):
         assert pool.used == sum(len(v) for v in held.values())
 
 
+# ---------------------------------------------- prefix sharing + CoW (pool)
+def test_acquire_refcount_and_shared_accounting():
+    pool = BlockPool(8, 4)
+    (b,) = pool.alloc(1, owner="a")
+    assert pool.register(b, pool.ROOT, (1, 2, 3, 4)) == b
+    pool.acquire(b, owner="b")
+    assert pool.refcount(b) == 2 and not pool.writable(b)
+    assert pool.used == 1                     # shared block counts ONCE
+    assert pool.shared == 1
+    with pytest.raises(ValueError, match="already holds"):
+        pool.acquire(b, owner="a")
+    with pytest.raises(ValueError, match="free block"):
+        pool.acquire(99, owner="c")
+    pool.free([b], owner="a")
+    assert pool.refcount(b) == 1 and pool.writable(b)
+    # still resident: stays indexed
+    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) == b
+    pool.free([b], owner="b")
+    assert pool.refcount(b) == 0 and pool.available == pool.total
+    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) is None  # freed: dereg'd
+
+
+def test_prefix_index_match_full_partial_and_cap():
+    pool = BlockPool(10, 4)
+    toks = list(range(5, 17))                 # 12 tokens = 3 full blocks
+    blocks = pool.alloc(3, owner="src")
+    parent = pool.ROOT
+    for i, b in enumerate(blocks):
+        parent = pool.register(b, parent, tuple(toks[i * 4:(i + 1) * 4]))
+        assert parent == b
+    # a duplicate registration resolves to the canonical block
+    (dup,) = pool.alloc(1, owner="dup")
+    assert pool.register(dup, pool.ROOT, tuple(toks[:4])) == blocks[0]
+    pool.free([dup], owner="dup")
+    # full-chunk walk
+    got, m = pool.match(toks, 12)
+    assert got == blocks and m == 12
+    # cap at P-1 turns the last chunk into a partial-tail share
+    got, m = pool.match(toks, 11)
+    assert got == blocks and m == 11
+    # diverging token stops the walk at the block boundary
+    other = toks[:4] + [99] + toks[5:]
+    got, m = pool.match(other, len(other) - 1)
+    assert got == blocks[:1] and m == 4
+    # prepare_write below the registered extent drops the entry
+    pool.prepare_write(blocks[2], 1)
+    assert pool.lookup(blocks[1], tuple(toks[8:12])) is None
+    got, m = pool.match(toks, 12)
+    assert got == blocks[:2] and m == 8
+
+
+def test_prepare_write_refuses_shared_block():
+    pool = BlockPool(6, 4)
+    (b,) = pool.alloc(1, owner="a")
+    pool.acquire(b, owner="b")
+    with pytest.raises(ValueError, match="shared"):
+        pool.prepare_write(b, 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(min_value=0, max_value=3),
+                              st.integers(min_value=0, max_value=5),
+                              st.integers(min_value=1, max_value=14)),
+                    min_size=1, max_size=120))
+def test_property_sharing_churn_invariants(ops):
+    """Random admit/append/free churn with prefix sharing on, mirroring
+    the engine's block bookkeeping against a content model. Invariants
+    checked after EVERY operation:
+
+    * refcounts never negative, holders unique (``pool.check``);
+    * no block is ever written while shared — CoW first (the state
+      machine refuses to write unless ``pool.writable``);
+    * CoW never mutates the original: the copy gets the writes;
+    * pool accounting sums to the pool (used + available == total), a
+      shared block counted once;
+    * the content model agrees with every slot's logical tokens — the
+      real no-cross-sequence-corruption property.
+    """
+    BS = 4
+    pool = BlockPool(13, BS)
+    contents: dict = {}           # phys block -> list of tokens written
+    slots: dict = {}              # sid -> {tokens, len, blocks}
+    next_sid = 0
+
+    def check_all():
+        pool.check()
+        assert pool.used + pool.available == pool.total
+        holders: dict = {}
+        for sid, s in slots.items():
+            assert len(set(s["blocks"])) == len(s["blocks"])
+            for b in s["blocks"]:
+                holders[b] = holders.get(b, 0) + 1
+            # content model == logical tokens (the corruption check)
+            for pos in range(s["len"]):
+                b = s["blocks"][pos // BS]
+                assert contents[b][pos % BS] == s["tokens"][pos], \
+                    (sid, pos, b)
+        for b, n in holders.items():
+            assert pool.refcount(b) == n, (b, n, pool.refcount(b))
+
+    def write(sid, token):
+        """The engine's grow-or-park + scatter, against the model."""
+        s = slots[sid]
+        pos = s["len"]
+        bi = pos // BS
+        if bi >= len(s["blocks"]):
+            got = pool.alloc(1, owner=sid)
+            if got is None:
+                return False                       # parked
+            s["blocks"].extend(got)
+            contents[got[0]] = [None] * BS
+        else:
+            b = s["blocks"][bi]
+            if not pool.writable(b):               # CoW before writing
+                got = pool.alloc(1, owner=sid)
+                if got is None:
+                    return False
+                contents[got[0]] = list(contents[b])   # device copy
+                pool.free([b], owner=sid)
+                assert pool.refcount(b) >= 1       # original survives
+                s["blocks"][bi] = got[0]
+        b = s["blocks"][bi]
+        assert pool.writable(b)                    # never write shared
+        pool.prepare_write(b, pos % BS)
+        contents[b][pos % BS] = token
+        s["len"] = pos + 1
+        s["tokens"].append(token)
+        return True
+
+    for kind, pick, val in ops:
+        if kind == 0:
+            # admit: prompt drawn from a tiny vocab so prefixes collide
+            prompt = [(val * (i + 3)) % 5 for i in range(val)]
+            blocks, m = pool.match(prompt, len(prompt) - 1)
+            need = blocks_for_tokens(len(prompt), BS) - len(blocks)
+            if pool.available < need:
+                continue                           # shed
+            sid = next_sid
+            next_sid += 1
+            for b in blocks:
+                pool.acquire(b, owner=sid)
+            slots[sid] = {"tokens": list(prompt[:m]), "len": m,
+                          "blocks": list(blocks)}
+            ok = True
+            for t in prompt[m:]:                   # catch-up writes
+                if not write(sid, t):
+                    ok = False
+                    break
+            if ok and m == 0:
+                # a plain admission registers its prompt blocks, chained
+                # through the canonical parent like the engine does
+                parent = pool.ROOT
+                for i, b in enumerate(slots[sid]["blocks"]):
+                    if parent is False:
+                        break
+                    parent = pool.register(
+                        b, parent, tuple(prompt[i * BS:(i + 1) * BS]))
+                    if parent is None:
+                        parent = False
+        elif kind == 1 and slots:                  # append (decode step)
+            sid = sorted(slots)[pick % len(slots)]
+            write(sid, val % 5)
+        elif kind == 2 and slots:                  # retire / preempt
+            sid = sorted(slots)[pick % len(slots)]
+            s = slots.pop(sid)
+            pool.free(s["blocks"], owner=sid)
+        check_all()
+
+    for sid, s in list(slots.items()):
+        pool.free(s["blocks"], owner=sid)
+    assert pool.available == pool.total
+    assert pool.stats()["indexed"] == 0
+
+
 # ------------------------------------------------- engine-level edge cases
 @pytest.fixture(scope="module")
 def stack():

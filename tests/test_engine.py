@@ -298,6 +298,274 @@ def test_paged_blocks_grow_lazily_and_free_on_eos(stack):
     assert eng.pool.available == eng.pool.total
 
 
+def _shared_prefix_reqs(cfg, n, prefix_len=20, suffix_len=3, max_new=5,
+                        seed=5):
+    """n requests sharing a common prefix with distinct random suffixes."""
+    rng = jax.random.key(seed)
+    rng, k = jax.random.split(rng)
+    common = jax.random.randint(k, (prefix_len,), 2, cfg.vocab_size).tolist()
+    out = []
+    for i in range(n):
+        rng, k = jax.random.split(rng)
+        sfx = jax.random.randint(k, (suffix_len,), 2, cfg.vocab_size).tolist()
+        out.append(Request(rid=i, prompt=common + sfx, max_new_tokens=max_new))
+    return out
+
+
+# ------------------------------------------------ prefix sharing + CoW
+def test_shared_prefix_streams_match_unshared(stack):
+    """The sharing regression: admissions that reuse resident prefix
+    blocks (including in-batch sharing within ONE add_requests call)
+    emit exactly the token streams of a sharing-disabled engine."""
+    cfg, model, params = stack
+    a = _shared_prefix_reqs(cfg, 4)
+    b = _shared_prefix_reqs(cfg, 4)
+    on = ServingEngine(model, params, batch_size=4, max_seq=64,
+                       paged=True, block_size=8, prefix_sharing=True)
+    off = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        paged=True, block_size=8, prefix_sharing=False)
+    on.run(list(a))
+    off.run(list(b))
+    for x, y in zip(a, b):
+        assert x.out_tokens == y.out_tokens, x.rid
+    assert on.metrics["shared_admissions"] == 3      # 1 plain + 3 shared
+    assert on.metrics["prefill_tokens_shared"] > 0
+    assert on.metrics["prefill_tokens_computed"] \
+        < off.metrics["prefill_tokens_computed"]
+    assert on.pool.available == on.pool.total        # everything returned
+    on.pool.check()
+
+
+def test_shared_tail_block_copy_on_write(stack):
+    """A request whose whole prompt is a prefix of a resident sequence
+    shares the resident *partial tail* block; its first append would
+    land inside that shared block, so it must copy-on-write — and both
+    streams must equal their solo runs."""
+    cfg, model, params = stack
+    rng = jax.random.key(11)
+    long = jax.random.randint(rng, (14,), 2, cfg.vocab_size).tolist()
+    ra = Request(rid=0, prompt=list(long), max_new_tokens=6)
+    rb = Request(rid=1, prompt=list(long[:11]), max_new_tokens=6)
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        paged=True, block_size=8, prefix_sharing=True)
+    assert eng.add_requests([ra]) == 1
+    assert eng.add_requests([rb]) == 1       # shares block 1 + partial tail
+    assert eng.metrics["shared_admissions"] == 1
+    eng.run([])
+    assert eng.metrics["cow_copies"] >= 1
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    for r in (ra, rb):
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             paged=True, block_size=8, prefix_sharing=False)
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=6)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_shared_blocks_accounted_once(stack):
+    """pool_stats/memory_pressure charge a shared block once: logical
+    table entries exceed physical used blocks under sharing."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        paged=True, block_size=8, prefix_sharing=True)
+    reqs = _shared_prefix_reqs(cfg, 4, prefix_len=16, suffix_len=2,
+                               max_new=50)   # keep slots resident
+    eng.add_requests(list(reqs))
+    stats = eng.pool_stats()
+    assert stats["shared"] == 2                   # the 2 prefix blocks
+    assert stats["logical_blocks"] > stats["used"]
+    # at admission: 3 blocks of the plain request, prefix shared by all
+    assert stats["used"] == 3
+    for _ in range(3):                            # drain catch-up suffixes
+        eng.step()
+    stats = eng.pool_stats()
+    # physical: 1x prefix (2 blocks, shared by 4) + 4x own tail block
+    assert stats["used"] == 2 + 4
+    assert stats["logical_blocks"] == 4 * 3 > stats["used"]
+    assert eng.memory_pressure() == stats["used"] / stats["total"]
+    eng.pool.check()
+
+
+def test_scheduler_gates_on_post_sharing_cost(stack):
+    """A queue of same-prefix requests fits where the worst-case cost
+    would not: the block-gated fill charges the post-sharing price."""
+    from repro.serve.scheduler import Scheduler
+    cfg, model, params = stack
+    # pool of 7 blocks; each prompt needs 3 alone (24 tokens / bs=8).
+    # Worst-case 4 requests = 12 blocks > 7; post-sharing = 3 + 3x1 = 6.
+    eng = ServingEngine(model, params, batch_size=4, max_seq=32,
+                        paged=True, block_size=8, num_blocks=8,
+                        prefix_sharing=True)
+    sched = Scheduler(eng)
+    reqs = _shared_prefix_reqs(cfg, 4, prefix_len=22, suffix_len=2,
+                               max_new=2)
+    for r in reqs:
+        assert sched.submit(r)
+    done = sched.drain()
+    assert len(done) == 4
+    assert eng.metrics["shared_admissions"] >= 1
+    assert eng.metrics["preemptions"] == 0   # fit without thrash
+    eng.pool.check()
+
+
+def test_park_resume_bit_exact_with_shared_blocks(stack):
+    """Pool exhaustion while slots share prefix blocks: parked slots
+    resume and all streams stay identical to uncontended runs."""
+    cfg, model, params = stack
+    reqs = _shared_prefix_reqs(cfg, 3, prefix_len=10, suffix_len=2,
+                               max_new=10, seed=21)
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        paged=True, block_size=4, num_blocks=9,
+                        prefix_sharing=True)
+    done = eng.run(list(reqs))
+    assert len(done) == 3
+    assert eng.metrics["shared_admissions"] >= 1
+    assert eng.metrics["parked_slot_steps"] > 0 \
+        or eng.metrics["preemptions"] > 0        # contention actually hit
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    for r in reqs:
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             paged=True, block_size=4, prefix_sharing=False)
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=10)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_preemption_of_shared_holder_keeps_other_side_intact(stack):
+    """Recompute-preemption of a slot that shares blocks with a live
+    slot frees only its own references — the survivor's stream and the
+    evicted request's post-resume stream both stay bit-exact."""
+    cfg, model, params = stack
+    reqs = _shared_prefix_reqs(cfg, 2, prefix_len=8, suffix_len=1,
+                               max_new=10, seed=33)
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        paged=True, block_size=4, num_blocks=7,
+                        prefix_sharing=True)
+    done = eng.run(list(reqs))
+    assert len(done) == 2
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    for r in reqs:
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             paged=True, block_size=4, prefix_sharing=False)
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=10)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_blocks_needed_charges_partial_tail_cow(stack):
+    """A match ending inside a shared partial tail must charge the
+    imminent copy-on-write block, or a batch of tail-sharing admissions
+    all passes the gate and parks on its first decode step."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        paged=True, block_size=8, prefix_sharing=True)
+    rng = jax.random.key(17)
+    base = jax.random.randint(rng, (12,), 2, cfg.vocab_size).tolist()
+    eng.add_requests([Request(rid=0, prompt=list(base), max_new_tokens=40)])
+    # full block + 2 tokens of the resident partial tail: 2 - 2 + 1 CoW
+    tail_share = Request(rid=1, prompt=list(base[:10]), max_new_tokens=2)
+    assert eng.blocks_needed(tail_share) == 1
+    # boundary-ended match: the un-shared suffix block is already counted
+    boundary = Request(rid=2, prompt=list(base[:8]) + [7, 7, 7],
+                       max_new_tokens=2)
+    assert eng.blocks_needed(boundary) == 1
+
+
+def test_long_unshared_suffix_prefills_plain(stack):
+    """Catch-up decode feeds the un-shared suffix one token per step, so
+    a short-prefix/long-suffix prompt must NOT engage sharing — one
+    batched prefill beats dozens of serial catch-up steps."""
+    cfg, model, params = stack
+    rng = jax.random.key(29)
+    rng, k = jax.random.split(rng)
+    base = jax.random.randint(k, (18,), 2, cfg.vocab_size).tolist()
+    rng, k = jax.random.split(rng)
+    tail = jax.random.randint(k, (30,), 2, cfg.vocab_size).tolist()
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        paged=True, block_size=8, prefix_sharing=True)
+    eng.add_requests([Request(rid=0, prompt=list(base), max_new_tokens=20)])
+    long_sfx = Request(rid=1, prompt=base[:16] + tail, max_new_tokens=2)
+    # suffix (30) > max(block_size, matched 16): full plain cost, and
+    # admission prefills rather than queueing 30 catch-up steps
+    assert eng.blocks_needed(long_sfx) == eng.pool.blocks_for(46)
+    assert eng.add_requests([long_sfx]) == 1
+    assert eng.metrics["shared_admissions"] == 0
+    assert eng.slot_pending[1] == []
+
+
+def test_cow_park_diverts_scatter_off_shared_block(stack):
+    """THE corruption regression: a slot parked because copy-on-write
+    could not allocate must not let its ride-along scatter land in the
+    still-shared block — the co-holder's stream would silently change.
+    Here slots A and C grab the last free blocks in the same step that
+    B needs its CoW, so B parks while sharing A's tail block; every
+    stream must still equal its uncontended solo run."""
+    cfg, model, params = stack
+    rng = jax.random.key(23)
+    rng, k = jax.random.split(rng)
+    pa = jax.random.randint(k, (8,), 2, cfg.vocab_size).tolist()
+    rng, k = jax.random.split(rng)
+    pc = jax.random.randint(k, (4,), 2, cfg.vocab_size).tolist()
+    rng, k = jax.random.split(rng)
+    # B shares A's first block + one token of A's second (tail) block,
+    # but B's next prompt token DIFFERS from A's token there — exactly
+    # the write that corrupts A if it lands in the shared block
+    pb = pa[:5] + [int(jax.random.randint(k, (), 2, cfg.vocab_size))]
+    assert pb[5] != pa[5]
+    a = Request(rid=0, prompt=list(pa), max_new_tokens=4)
+    c = Request(rid=1, prompt=list(pc), max_new_tokens=4)
+    b = Request(rid=2, prompt=list(pb), max_new_tokens=3)
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        paged=True, block_size=4, num_blocks=6,
+                        prefix_sharing=True)
+    assert eng.add_requests([a]) == 1        # slot 0: blocks x, y
+    assert eng.add_requests([c]) == 1        # slot 1: block c1
+    assert eng.add_requests([b]) == 1        # slot 2: shares x + tail y
+    assert eng.metrics["shared_admissions"] == 1
+    done = eng.run([])
+    assert len(done) == 3
+    assert eng.metrics["cow_parks"] >= 1     # the dangerous state was hit
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    for r in (a, c, b):
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             paged=True, block_size=4, prefix_sharing=False)
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+def test_paged_kernel_engine_streams_match_gather_engine(stack):
+    """use_kernel=True (Pallas paged-attention decode, interpret mode on
+    CPU) serves the same token streams as the jnp gather path."""
+    cfg, model, params = stack
+    lens = [5, 11, 7]
+    a, b = _reqs(cfg, lens, max_new=4), _reqs(cfg, lens, max_new=4)
+    gather = ServingEngine(model, params, batch_size=3, max_seq=32,
+                           paged=True, block_size=8, use_kernel=False)
+    kernel = ServingEngine(model, params, batch_size=3, max_seq=32,
+                           paged=True, block_size=8, use_kernel=True)
+    gather.run(list(a))
+    kernel.run(list(b))
+    for x, y in zip(a, b):
+        assert x.out_tokens == y.out_tokens, x.rid
+
+
+def test_moe_engine_never_shares_prefixes(stack):
+    """MoE catch-up decode would co-batch through shared expert capacity
+    (the documented bit-exactness caveat), so sharing stays off."""
+    cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        block_size=8, prefix_sharing=True)
+    assert eng.paged and not eng.prefix_sharing
+
+
 def test_paged_admission_counts_only_callers_requests(stack):
     """add_requests returns how many of the CALLER's requests were taken
     even when preempted requests re-admit first."""

@@ -129,6 +129,140 @@ def test_wkv_state_carry_equals_two_halves():
                                atol=1e-4, rtol=1e-4)
 
 
+# --------------------------------------------------- paged decode attention
+from repro.kernels.paged_attention.ops import (  # noqa: E402
+    paged_decode_attention as paged_decode)
+from repro.kernels.paged_attention.ref import (  # noqa: E402
+    gathered_decode_ref, paged_decode_attention_ref)
+
+
+def _paged_case(B, Hq, Hkv, hd, bs, max_blocks, dt, *, seed=0, full=False):
+    """A pool + per-row disjoint block tables at ragged lengths, the
+    shapes the serving engine hands the kernel: zeroed table tails point
+    at the scratch block, row lengths land anywhere in [1, capacity]."""
+    nb = B * max_blocks + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dt)
+    pool_k = jax.random.normal(ks[1], (nb, bs, Hkv, hd), dt)
+    pool_v = jax.random.normal(ks[2], (nb, bs, Hkv, hd), dt)
+    rng = np.random.default_rng(seed + B * 1000 + hd)
+    free = list(rng.permutation(np.arange(1, nb)))
+    lens = np.zeros(B, np.int32)
+    table = np.zeros((B, max_blocks), np.int32)
+    for b in range(B):
+        lens[b] = max_blocks * bs if full \
+            else int(rng.integers(1, max_blocks * bs + 1))
+        for i in range(-(-int(lens[b]) // bs)):
+            table[b, i] = free.pop()
+    return q, pool_k, pool_v, jnp.asarray(table), jnp.asarray(lens)
+
+
+# num_heads x head_dim x block_size x active-slot count x window x dtype;
+# every row also varies ragged per-row lengths via _paged_case
+PAGED_GRID = [
+    (1, 4, 1, 64, 16, 4, 0, jnp.float32),
+    (2, 8, 2, 64, 16, 4, 0, jnp.float32),     # GQA
+    (3, 4, 4, 32, 8, 6, 0, jnp.float32),      # MHA, small blocks
+    (4, 2, 1, 128, 16, 5, 0, jnp.float32),    # wide heads
+    (2, 8, 8, 64, 8, 4, 0, jnp.float32),
+    (4, 4, 1, 64, 16, 5, 24, jnp.float32),    # sliding window
+    (2, 8, 2, 64, 16, 4, 0, jnp.bfloat16),
+    (3, 6, 6, 64, 8, 4, 0, jnp.bfloat16),
+    (2, 4, 2, 32, 8, 6, 12, jnp.bfloat16),    # window + bf16
+]
+
+
+def _assert_ulp(a, b, nulp: int):
+    """Elementwise |a - b| <= nulp float32 steps — the tightest portable
+    contract between two separately-compiled XLA programs (the CPU
+    backend deletes optimization barriers and keeps per-context codegen
+    freedom in transcendentals, worth 1-3 ulp on some shapes; a real
+    kernel bug is 3+ orders of magnitude larger)."""
+    np.testing.assert_array_max_ulp(np.float32(a), np.float32(b),
+                                    maxulp=nulp, dtype=np.float32)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,hd,bs,mb,win,dt", PAGED_GRID)
+def test_paged_decode_kernel_differential(B, Hq, Hkv, hd, bs, mb, win, dt):
+    """The differential grid: the Pallas kernel (interpret mode) against
+    the streaming jnp oracle — float32 within 4 ulp (bit-exact on
+    nearly every shape; see ref.py for why universal bitwise equality
+    between separately-compiled XLA programs is not contractable) and
+    within dtype tolerance in bfloat16; kernel and oracle must both
+    agree with the independent gather-then-softmax reference to
+    dtype-tiered tolerance."""
+    q, pk, pv, table, lens = _paged_case(B, Hq, Hkv, hd, bs, mb, dt)
+    out, lse = paged_decode(q, pk, pv, table, lens, sliding_window=win)
+    ro, rl = paged_decode_attention_ref(q, pk, pv, table, lens,
+                                        sliding_window=win)
+    go, gl = gathered_decode_ref(q, pk, pv, table, lens, sliding_window=win)
+    if dt == jnp.float32:
+        # out: bitwise on every audited (shape x seed) case — the 4-ulp
+        # bound is slack for toolchain drift only. lse: jnp.log keeps
+        # per-context codegen freedom (see ref.py), worth <= ~16 ulp.
+        _assert_ulp(out, ro, 4)
+        _assert_ulp(lse, rl, 32)
+    else:
+        np.testing.assert_allclose(np.float32(out), np.float32(ro),
+                                   atol=tol(dt), rtol=tol(dt))
+        np.testing.assert_allclose(np.float32(lse), np.float32(rl),
+                                   atol=tol(dt), rtol=tol(dt))
+    np.testing.assert_allclose(np.float32(out), np.float32(go),
+                               atol=tol(dt), rtol=tol(dt))
+    np.testing.assert_allclose(np.float32(lse), np.float32(gl),
+                               atol=tol(dt), rtol=tol(dt))
+
+
+def test_paged_decode_kernel_full_and_single_token_rows():
+    """Length edges: a row at exactly full capacity and (via seed reroll)
+    rows at 1 token keep the mask honest at both extremes."""
+    q, pk, pv, table, lens = _paged_case(2, 4, 2, 64, 16, 3, jnp.float32,
+                                         full=True)
+    out, _ = paged_decode(q, pk, pv, table, lens)
+    ro, _ = paged_decode_attention_ref(q, pk, pv, table, lens)
+    _assert_ulp(out, ro, 4)
+    lens1 = jnp.ones_like(lens)
+    out1, _ = paged_decode(q, pk, pv, table, lens1)
+    go1, _ = gathered_decode_ref(q, pk, pv, table, lens1)
+    np.testing.assert_allclose(np.float32(out1), np.float32(go1), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_paged_decode_kernel_ignores_scratch_garbage():
+    """Unowned table tails point at scratch block 0, whose contents are
+    garbage by design: poisoning scratch must not change any output."""
+    q, pk, pv, table, lens = _paged_case(3, 8, 2, 64, 16, 4, jnp.float32)
+    out, lse = paged_decode(q, pk, pv, table, lens)
+    pk2 = pk.at[0].set(1e9)
+    pv2 = pv.at[0].set(-1e9)
+    out2, lse2 = paged_decode(q, pk2, pv2, table, lens)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(lse), np.asarray(lse2))
+
+
+def test_paged_attention_serving_path_kernel_vs_gather():
+    """Through the serving entry point (`attention.paged_decode_attention`
+    with the scatter of the new token): use_kernel=True and the jnp
+    gather path must return bitwise-identical updated pools and
+    tolerance-close outputs."""
+    from repro.models.attention import paged_decode_attention as serve_paged
+    B, Hq, Hkv, hd, bs, mb = 3, 8, 2, 64, 8, 4
+    q, pk, pv, table, lens = _paged_case(B, Hq, Hkv, hd, bs, mb, jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    k_new = jax.random.normal(ks[0], (B, 1, Hkv, hd))
+    v_new = jax.random.normal(ks[1], (B, 1, Hkv, hd))
+    # cache_len = lens - 1 so the scatter stays inside owned blocks
+    cache_len = lens - 1
+    o_g, pk_g, pv_g = serve_paged(q[:, None], pk, pv, k_new, v_new, table,
+                                  cache_len, use_kernel=False)
+    o_k, pk_k, pv_k = serve_paged(q[:, None], pk, pv, k_new, v_new, table,
+                                  cache_len, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(pk_g), np.asarray(pk_k))
+    np.testing.assert_array_equal(np.asarray(pv_g), np.asarray(pv_k))
+    np.testing.assert_allclose(np.float32(o_g), np.float32(o_k), atol=3e-5,
+                               rtol=3e-5)
+
+
 # ---------------------------------------------------------------- ssm scan
 from repro.kernels.ssm_scan.ops import selective_scan as pallas_ssm  # noqa: E402
 from repro.kernels.ssm_scan.ref import ssm_scan_ref  # noqa: E402
