@@ -10,6 +10,11 @@ slot on device. This bench times both against identical request mixes
 and checks the device path wins at batch >= 4 (acceptance criterion),
 plus reports per-step decode latency with all slots at different
 lengths (the mixed-length continuous-batching configuration).
+
+The stripe scenarios isolate the admission comparison; the **paged**
+scenarios then time the default engine configuration (block-pool
+admission through retire, and block-table decode steps), so the
+flagship path is benchmarked, not just the legacy one.
 """
 from __future__ import annotations
 
@@ -73,9 +78,10 @@ def run(report) -> None:
         lens = [5 + 3 * (i % 4) for i in range(B)]   # mixed lengths
         prompts = _prompts(cfg, lens)
 
-        # paged=False: this bench measures the STRIPE admission path
-        # against the seed's host-copy (and resets slots by hand, which
-        # would leak pool blocks); bench_paged_kv covers the pool.
+        # paged=False here: this scenario measures the STRIPE admission
+        # path against the seed's host-copy (and resets slots by hand,
+        # which would leak pool blocks); the paged scenarios below and
+        # bench_paged_kv cover the pool.
         eng = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
                             paged=False)
 
@@ -127,9 +133,55 @@ def run(report) -> None:
         report.check(f"device admission faster at B={B}", dev < host,
                      f"device {dev*1e3:.1f}ms vs host-copy {host*1e3:.1f}ms")
 
-    # mixed-length equivalence spot check rides along with the bench
+    # ------------------------- paged-path scenarios (the default config)
+    # The stripe timings above isolate the device-vs-host admission win
+    # (and hand-reset slots, which would leak pool blocks); the flagship
+    # engine configuration is PAGED — time it too, end to end, so the
+    # default path the tests enforce is also the path the bench watches.
+    for B in (4, 8):
+        lens = [5 + 3 * (i % 4) for i in range(B)]
+        prompts = _prompts(cfg, lens, seed=2)
+        eng = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                            paged=True, block_size=16,
+                            prefix_sharing=False)   # time the compute path
+
+        def admit_paged():
+            reqs = [Request(rid=i, prompt=list(p), max_new_tokens=1)
+                    for i, p in enumerate(prompts)]
+            done = eng.run(reqs)         # admit, emit, retire: blocks freed
+            assert len(done) == B
+            jax.block_until_ready(eng.caches["k"])
+
+        report.timeit(f"serving.admit.paged.B{B}", admit_paged,
+                      repeats=7, warmup=2,
+                      derived=f"{B} prompts through the block pool, "
+                      "admit->retire")
+        report.check(f"paged admission drains the pool clean at B={B}",
+                     eng.pool.available == eng.pool.total,
+                     f"{eng.pool.available}/{eng.pool.total} blocks free")
+
+        eng2 = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                             paged=True, block_size=16)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=10 ** 6)
+                for i, p in enumerate(prompts)]
+        assert eng2.add_requests(reqs) == B
+
+        def decode_step_paged():
+            if max(eng2.slot_len) >= MAX_SEQ - 1:    # paranoia: never hit
+                raise RuntimeError("capacity")
+            eng2.step()
+            jax.block_until_ready(eng2.caches["k"])
+
+        report.timeit(f"serving.decode_step.paged.B{B}", decode_step_paged,
+                      repeats=10, warmup=3,
+                      derived="block-table gather/scatter decode, "
+                      "mixed lengths")
+
+    # mixed-length equivalence spot check rides along with the bench —
+    # on the DEFAULT engine (paged for this pure-attention family)
     lens = [5, 9, 12, 7]
     eng = ServingEngine(model, params, batch_size=4, max_seq=MAX_SEQ)
+    assert eng.paged                       # default config is the pool
     solo = ServingEngine(model, params, batch_size=1, max_seq=MAX_SEQ)
     batched = [Request(rid=i, prompt=list(p), max_new_tokens=4)
                for i, p in enumerate(_prompts(cfg, lens, seed=3))]

@@ -1,0 +1,150 @@
+"""Speculative draft-and-verify decode: acceptance-rate sweep over
+draft quality x window size, tokens per target step, and wall-clock vs
+the non-speculative baseline.
+
+Three drafts span the quality axis against one target:
+
+* **self** — the target's own weights: greedy proposals ARE the target
+  argmax, so acceptance is total and every verify step commits k+1
+  tokens (the upper bound, and the headline check: tokens/step > 1).
+* **half** — the target's first half of layers (a free "distilled"
+  draft: the stacked block params sliced on the layer axis): cheaper
+  and partially agreeing.
+* **cold** — the same architecture at a different random init:
+  acceptance ~ 0, the adversarial floor. Even here the stream must stay
+  exactly the baseline stream — rejected windows cost a step but never
+  correctness.
+
+Every scenario cross-checks the greedy stream against the
+non-speculative engine token-for-token (the bit-identity regression in
+``tests/test_speculative.py``, re-validated on the bench workload).
+
+    PYTHONPATH=src python -m benchmarks.bench_speculative
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+
+MAX_SEQ = 64
+B = 4
+MAX_NEW = 12
+LENS = (5, 11, 7, 14)
+
+
+def _reqs(cfg, seed=1):
+    rng = jax.random.key(seed)
+    out = []
+    for i, L in enumerate(LENS):
+        rng, k = jax.random.split(rng)
+        out.append(Request(rid=i, max_new_tokens=MAX_NEW,
+                           prompt=jax.random.randint(
+                               k, (L,), 2, cfg.vocab_size).tolist()))
+    return out
+
+
+def _half_layer_draft(cfg, params):
+    """A free draft: the target's bottom half of the layer stack. Block
+    params are stacked (L, ...) for the scan, so the slice is a tree
+    map; embeddings/head are shared."""
+    half = max(cfg.n_layers // 2, 1)
+    dcfg = dataclasses.replace(cfg, n_layers=half)
+    dparams = dict(params)
+    dparams["blocks"] = jax.tree.map(lambda x: x[:half], params["blocks"])
+    return build_model(dcfg), dparams
+
+
+def _serve(eng, reqs):
+    t0 = time.perf_counter()
+    done = eng.run(list(reqs))
+    wall = time.perf_counter() - t0
+    assert len(done) == len(reqs)
+    return wall
+
+
+def run(report) -> None:
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    half_model, half_params = _half_layer_draft(cfg, params)
+    drafts = {
+        "self": (model, params),
+        "half": (half_model, half_params),
+        "cold": (model, model.init(jax.random.key(9))),
+    }
+
+    base_reqs = _reqs(cfg)
+    base = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                         paged=True, block_size=8)
+    base_wall = _serve(base, base_reqs)
+    base_steps = base.metrics["decode_steps"]
+    base_tokens = sum(len(r.out_tokens) for r in base_reqs)
+    report.row("speculative.baseline.wall_s", round(base_wall, 3), "s",
+               f"{B} requests x {MAX_NEW} tokens, non-speculative")
+    report.row("speculative.baseline.decode_steps", base_steps, "steps", "")
+
+    best_tps = 0.0
+    for k in (2, 4):
+        for name, (dm, dp) in drafts.items():
+            eng = ServingEngine(model, params, batch_size=B,
+                                max_seq=MAX_SEQ, paged=True, block_size=8,
+                                draft_model=dm, draft_params=dp,
+                                speculation=k)
+            reqs = _reqs(cfg)
+            wall = _serve(eng, reqs)
+            m = eng.metrics
+            accept = m["spec_accepted"] / max(m["spec_proposed"], 1)
+            # tokens committed by decode/verify steps (prefill emits one
+            # per request outside the step loop)
+            emitted = sum(len(r.out_tokens) for r in reqs) - len(reqs)
+            tps = emitted / max(m["decode_steps"], 1)
+            # per-SLOT tokens per target step: the speculative
+            # multiplier (a non-speculative batch scores exactly 1.0)
+            slot_tps = tps / B
+            tag = f"speculative.k{k}.{name}"
+            report.row(f"{tag}.accept_rate", round(accept, 3), "frac",
+                       f"{m['spec_accepted']}/{m['spec_proposed']} "
+                       "proposals accepted")
+            report.row(f"{tag}.tokens_per_step", round(tps, 2), "tok/step",
+                       f"{emitted} tokens in {m['decode_steps']} target "
+                       "steps, batch-wide")
+            report.row(f"{tag}.tokens_per_slot_step", round(slot_tps, 2),
+                       "tok/slot/step", "non-speculative baseline = 1.0")
+            report.row(f"{tag}.wall_s", round(wall, 3), "s",
+                       f"baseline {base_wall:.3f}s")
+            report.row(f"{tag}.draft_steps", m["draft_steps"], "steps",
+                       "small-model decode steps spent proposing")
+            ok = all(a.out_tokens == b.out_tokens
+                     for a, b in zip(base_reqs, reqs))
+            report.check(f"greedy stream identical under k={k} {name} "
+                         "draft", ok, f"{len(reqs)} streams compared")
+            assert eng.pool.available == eng.pool.total
+            if name == "self":
+                best_tps = max(best_tps, slot_tps)
+                report.check(
+                    f"self-draft k={k} uses fewer target steps",
+                    m["decode_steps"] < base_steps,
+                    f"{m['decode_steps']} vs {base_steps} baseline steps")
+
+    report.check("high-acceptance draft commits > 1 token per slot per "
+                 "target step", best_tps > 1.0,
+                 f"best tokens/slot/step {best_tps:.2f} "
+                 "(non-speculative = 1.0)")
+    report.row("speculative.total_tokens", base_tokens, "tokens",
+               "per scenario, streams all identical")
+
+
+if __name__ == "__main__":
+    from benchmarks.report import Report
+
+    rep = Report(verbose=True)
+    run(rep)
+    raise SystemExit(1 if rep.n_failed else 0)

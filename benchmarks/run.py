@@ -15,8 +15,11 @@ validating the paper's claims. Exit code 1 if any check fails.
 | bench_multimodel  | TPU adaptation: mesh space-sharing                |
 | bench_kernels     | Pallas kernel correctness + analytic intensity    |
 | bench_serving     | slot-native engine: device admission vs host copy |
+|                   | + the paged default path end to end               |
 | bench_paged_kv    | paged KV pool: concurrency at equal KV memory,    |
 |                   | prefix sharing: prefill tokens actually computed  |
+| bench_speculative | draft-and-verify decode: acceptance x draft       |
+|                   | quality x k, tokens per target step               |
 | bench_roofline    | §Roofline over the 40 dry-run artifacts           |
 | bench_extraction  | end-to-end extraction quality (trains the stack)  |
 """
@@ -37,6 +40,7 @@ MODULES = [
     "bench_kernels",
     "bench_serving",
     "bench_paged_kv",
+    "bench_speculative",
     "bench_roofline",
     "bench_extraction",     # trains the full stack: ~6 min on 1 core
 ]

@@ -154,6 +154,81 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, sliding_window: int = 0):
     return _combine(scores, v_cache, q.shape[2])
 
 
+def verify_decode_attention(q, k_cache, v_cache, base, *, sliding_window=0):
+    """Multi-token (speculative verify) decode against a stripe cache.
+
+    q: (B, S, Hq, hd) — S = k+1 tokens per row at absolute positions
+    ``base[b] + [0, S)`` (their K/V already written); k/v_cache:
+    (B, T, Hkv, hd); base: (B,) tokens cached per row *before* this
+    window. Causal masking inside the window: query j attends to cache
+    positions <= base[b] + j, so position j's output conditions on the
+    committed context plus proposals d_1..d_j — exactly what j+1
+    sequential ``decode_attention`` calls would each see.
+    """
+    scores = _gqa_scores(q, k_cache)                       # (B,Hq,S,T)
+    S, T = q.shape[1], k_cache.shape[1]
+    base = jnp.asarray(base).reshape(-1, 1, 1)             # (B,1,1)
+    i = base + jnp.arange(S)[None, :, None]                # abs q position
+    j = jnp.arange(T)[None, None, :]
+    valid = j <= i
+    if sliding_window:
+        valid &= j > i - sliding_window
+    scores = jnp.where(valid[:, None, :, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    return _combine(scores, v_cache, q.shape[2])
+
+
+def paged_verify_attention(q, pool_k, pool_v, k_new, v_new, block_table,
+                           cache_len, n_write, *, sliding_window: int = 0,
+                           use_kernel: bool = False):
+    """Multi-token verify against the KV block pool.
+
+    q/k_new/v_new: (B, S, H*, hd) — S = k+1 window tokens per row at
+    positions ``cache_len[b] + [0, S)``; n_write: (B,) tokens of the
+    window row b actually owns blocks for (``n_spec + 1``; 0 for parked
+    riders). Window token j of row b scatters at
+    ``(block_table[b, (len+j) // bs], (len+j) % bs)`` when ``j <
+    n_write[b]`` and is **diverted to the scratch block** otherwise —
+    a row must never scatter speculative K/V into a block it has not
+    been granted (it could still be shared with another sequence, or
+    not allocated at all). Reads past a row's n_write are garbage but
+    masked out of every output the caller commits (acceptance is capped
+    at n_spec). Returns (out (B, S, Hq*hd), new_pool_k, new_pool_v).
+
+    ``use_kernel`` replays the single-token Pallas kernel once per
+    window position (the pool is scattered first, each call masks to
+    ``len + j + 1``), keeping the in-place read property; the jnp path
+    gathers once and masks causally inside the window.
+    """
+    from repro.serve.blocks import SCRATCH_BLOCK
+    bs = pool_k.shape[1]
+    B, S = q.shape[:2]
+    base = jnp.asarray(cache_len, jnp.int32).reshape(-1)    # (B,)
+    pos = base[:, None] + jnp.arange(S)[None, :]            # (B,S)
+    rows = jnp.arange(B)
+    safe = jnp.arange(S)[None, :] < jnp.asarray(n_write,
+                                                jnp.int32).reshape(-1, 1)
+    phys = jnp.where(safe, block_table[rows[:, None], pos // bs],
+                     SCRATCH_BLOCK)                         # (B,S)
+    pool_k = pool_k.at[phys, pos % bs].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, pos % bs].set(v_new.astype(pool_v.dtype))
+    max_blocks = block_table.shape[1]
+    if use_kernel:
+        from repro.kernels.paged_attention.ops import (
+            paged_decode_attention as _paged_kernel)
+        outs = []
+        for j in range(S):
+            o, _ = _paged_kernel(q[:, j], pool_k, pool_v, block_table,
+                                 base + j + 1, sliding_window=sliding_window)
+            outs.append(o.reshape(B, -1))
+        return jnp.stack(outs, axis=1), pool_k, pool_v
+    gk = pool_k[block_table].reshape(B, max_blocks * bs, *pool_k.shape[2:])
+    gv = pool_v[block_table].reshape(B, max_blocks * bs, *pool_v.shape[2:])
+    out = verify_decode_attention(q, gk, gv, base,
+                                  sliding_window=sliding_window)
+    return out, pool_k, pool_v
+
+
 def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
                            cache_len, *, sliding_window: int = 0,
                            use_kernel: bool = False):
@@ -204,13 +279,39 @@ def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
 def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
                     positions=None, mrope_positions=None, causal=True,
                     sliding_window=None, plan=None, block_table=None,
-                    paged_kernel=False):
+                    paged_kernel=False, n_write=None):
     """Full attention sub-block incl. output proj. Returns (out, new_cache).
 
     cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None — or, with
     ``block_table`` set, the paged pool dict(k=(num_blocks,bs,Hkv,hd), ...).
+    In decode mode, ``x`` with more than one token per row is the
+    speculative **verify window**: the S tokens write K/V at positions
+    ``cache_len[b] + [0, S)`` (paged writes diverted to scratch past
+    ``n_write[b]``) and attend causally inside the window.
     """
     win = cfg.sliding_window if sliding_window is None else sliding_window
+    if mode == "decode" and x.shape[1] > 1:
+        # ---- multi-token verify window (speculative decode) ----
+        B, S, _ = x.shape
+        idx = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+        pos = idx[:, None] + jnp.arange(S)[None, :]          # (B,S)
+        q, k, v = qkv(x, p, cfg, positions=pos,
+                      mrope_positions=mrope_positions)
+        if block_table is not None:
+            nw = jnp.full((B,), S, jnp.int32) if n_write is None \
+                else jnp.asarray(n_write, jnp.int32)
+            o, k_cache, v_cache = paged_verify_attention(
+                q, cache["k"], cache["v"], k, v, block_table, idx, nw,
+                sliding_window=win, use_kernel=paged_kernel)
+        else:
+            rows = jnp.arange(B)[:, None]
+            k_cache = cache["k"].at[rows, pos].set(
+                k.astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, pos].set(
+                v.astype(cache["v"].dtype))
+            o = verify_decode_attention(q, k_cache, v_cache, idx,
+                                        sliding_window=win)
+        return o @ p["w_o"], {"k": k_cache, "v": v_cache}
     if mode == "decode":
         # cache_len = number of tokens already cached; the new token goes
         # at index cache_len and attends to indices [0, cache_len].

@@ -247,6 +247,59 @@ class Model:
         logits = _logits(params, cfg, x)
         return logits, new_cache
 
+    # ---------------- verify (speculative multi-token decode) ----------
+    def verify_step(self, params, tokens, cache, cache_len, plan=None,
+                    block_table=None, paged_kernel: bool = False,
+                    n_write=None):
+        """Multi-token decode: the speculative **verify** path.
+
+        tokens (B, S) int32 — row b's S = k+1 window tokens (the last
+        committed token followed by the draft's proposals) at positions
+        ``cache_len[b] + [0, S)``; cache_len (B,) int32 tokens already
+        cached per row. Every window token writes its K/V at its own
+        position and attends causally *inside the window* (query j sees
+        cache positions <= cache_len[b] + j), so ``logits[:, j]`` equals
+        what the j+1-th of S sequential :meth:`decode_step` calls would
+        produce — the differential property ``tests/test_speculative.py``
+        enforces. Returns (logits (B, S, V), new_cache).
+
+        Paged mode (``block_table``): ``n_write`` (B,) caps how many
+        window positions row b may scatter into its own blocks; writes
+        past the cap land in the scratch block (a speculating row is
+        granted blocks up to its watermark *before* the step — see
+        ``ServingEngine._ensure_writable`` — and a rider row must not
+        touch blocks it does not own). Only pure-attention ``{k, v}``
+        caches verify: recurrent state (rwkv / hybrid SSM) advances
+        token-at-a-time and has no multi-token catch-up here.
+        """
+        cfg = self.cfg
+        kind = transformer.block_kind(cfg)
+        if kind in ("rwkv", "hybrid"):
+            raise ValueError(f"verify_step unsupported for family "
+                             f"{kind!r} (recurrent state is sequential)")
+        B, S = tokens.shape
+        x = _embed_tokens(params, cfg, tokens)
+        idx = jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,))
+        extras = {"cache_len": idx}
+        if block_table is not None:
+            extras["block_table"] = jnp.asarray(block_table, jnp.int32)
+            extras["paged_kernel"] = bool(paged_kernel)
+            if n_write is not None:
+                extras["n_write"] = jnp.asarray(n_write, jnp.int32)
+        pos = idx[:, None] + jnp.arange(S)[None, :]
+        if cfg.rope == "learned":
+            x = x + layers.sinusoidal_pos(pos, cfg.d_model, x.dtype)
+        if cfg.rope == "mrope":
+            extras["mrope_positions"] = jnp.broadcast_to(
+                pos[:, None, :], (B, 3, S)).astype(jnp.int32)
+        if plan is not None:
+            x = plan.constrain_act(x)
+        x, new_cache, _ = _run_stack(params, cfg, x, mode="decode",
+                                     cache=cache, extras=extras, plan=plan)
+        x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = _logits(params, cfg, x)
+        return logits, new_cache
+
     # ---------------- cache ----------------
     def init_cache(self, batch_size: int, capacity: int):
         """Zeroed decode cache with room for ``capacity`` tokens."""

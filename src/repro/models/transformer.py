@@ -91,7 +91,8 @@ def apply_block(x, p, cfg, *, kind, mode, cache=None, extras=None, plan=None):
         positions=extras.get("positions"),
         mrope_positions=extras.get("mrope_positions"), plan=plan,
         block_table=extras.get("block_table"),
-        paged_kernel=extras.get("paged_kernel", False))
+        paged_kernel=extras.get("paged_kernel", False),
+        n_write=extras.get("n_write"))
 
     if kind == "hybrid":
         scache = None if cache is None else {"state": cache["ssm_state"]}

@@ -24,7 +24,11 @@ may be held by several owners at once: ``alloc`` mints a block at
 refcount 1, ``acquire`` adds a holder, ``free`` drops one — the block
 returns to the pool only when its last holder lets go, so a shared
 block occupies pool memory (and ``used``/``occupancy`` accounting)
-exactly once. On top of the refcounts sits a **prefix index** keyed by
+exactly once. A freed block's index entry survives as a **cached**
+block until ``alloc`` recycles the memory (unindexed blocks are handed
+out first): a later same-prefix admission ``acquire``s it back off the
+free list — content untouched — so sequential same-template requests
+share, not just overlapping ones. On top of the refcounts sits a **prefix index** keyed by
 token content: ``register`` records "this block holds these tokens,
 chained after that block", and ``match`` walks a new prompt through
 the index block by block so admission can ``acquire`` the resident
@@ -110,6 +114,12 @@ class BlockPool:
         """Fraction of the pool in use, in [0, 1]."""
         return self.used / self.total if self.total else 1.0
 
+    @property
+    def cached(self) -> int:
+        """Free blocks whose prefix-index entry is still alive — content
+        reusable by a future match until ``alloc`` recycles them."""
+        return sum(1 for b in self._block_key if b not in self._holders)
+
     def blocks_for(self, n_tokens: int) -> int:
         return blocks_for_tokens(n_tokens, self.block_size)
 
@@ -131,22 +141,46 @@ class BlockPool:
     # --------------------------------------------------------- alloc/free
     def alloc(self, n: int, owner) -> list | None:
         """Take ``n`` fresh blocks (refcount 1) for ``owner``; None if
-        fewer are free."""
+        fewer are free. Free blocks still carrying a **cached** prefix
+        entry (see :meth:`free`) are handed out last — and evicted from
+        the index the moment they are, so the index never advertises
+        content about to be overwritten."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
-        got = [self._free.pop() for _ in range(n)]
+        got: list = []
+        # LIFO over unindexed blocks first: recently-touched memory is
+        # reused AND resident cached prefixes survive as long as any
+        # uncached block can serve the allocation
+        for i in range(len(self._free) - 1, -1, -1):
+            if len(got) == n:
+                break
+            if self._free[i] not in self._block_key:
+                got.append(self._free.pop(i))
+        while len(got) < n:                  # evict coldest cached entries
+            b = self._free.pop(0)
+            self.deregister(b)
+            got.append(b)
         for b in got:
             self._holders[b] = [owner]
         return got
 
     def acquire(self, block: int, owner) -> None:
-        """Add ``owner`` as a holder of an already-resident ``block``
-        (prefix sharing). Double-hold is a hard error — no table maps
-        the same physical block twice for one sequence."""
+        """Add ``owner`` as a holder of ``block``. The block is either
+        resident (prefix sharing between live sequences) or a **cached
+        free** block still advertised by the index — the latter is
+        *revived*: pulled off the free list with ``owner`` as its sole
+        holder, its device content untouched since the last free (only
+        ``alloc`` recycles content, and it deregisters first). Double-
+        hold is a hard error — no table maps the same physical block
+        twice for one sequence."""
         holders = self._holders.get(block)
         if holders is None:
+            if block in self._block_key:
+                self._free.remove(block)     # revive a cached prefix block
+                self._holders[block] = [owner]
+                return
             raise ValueError(f"block {block}: acquire of a free block")
         if owner in holders:
             raise ValueError(f"block {block}: {owner!r} already holds it")
@@ -154,8 +188,11 @@ class BlockPool:
 
     def free(self, blocks: list, owner) -> None:
         """Drop ``owner``'s hold on each of ``blocks``; a block returns
-        to the pool (and leaves the prefix index) when its last holder
-        lets go. Double-free or a free of someone else's block fails
+        to the pool when its last holder lets go — but its prefix-index
+        entry **stays alive** (a *cached* block) until ``alloc`` hands
+        the memory back out, so a later same-template request can still
+        match and revive it (sequential sharing, not just overlapping
+        arrivals). Double-free or a free of someone else's block fails
         loudly."""
         for b in blocks:
             holders = self._holders.get(b)
@@ -167,7 +204,6 @@ class BlockPool:
             holders.remove(owner)
             if not holders:
                 del self._holders[b]
-                self.deregister(b)
                 self._free.append(b)
 
     # ------------------------------------------------------- prefix index
@@ -195,12 +231,20 @@ class BlockPool:
         return block
 
     def deregister(self, block: int) -> None:
+        """Drop ``block``'s index entry — and, recursively, any entries
+        chained *after* it: a child's key names this block as parent, and
+        once the parent id is recycled with new content a same-id
+        re-registration would make those stale chains reachable again
+        with the wrong tokens behind them."""
         key = self._block_key.pop(block, None)
-        if key is not None:
-            bucket = self._children[key[0]]
-            bucket.remove(block)
-            if not bucket:
-                del self._children[key[0]]
+        if key is None:
+            return
+        for child in list(self._children.get(block, ())):
+            self.deregister(child)
+        bucket = self._children[key[0]]
+        bucket.remove(block)
+        if not bucket:
+            del self._children[key[0]]
 
     def registered_extent(self, block: int) -> int:
         """Tokens the index advertises for ``block`` (0 if unregistered)."""
@@ -270,13 +314,15 @@ class BlockPool:
         return {"total": self.total, "used": self.used,
                 "available": self.available, "occupancy": self.occupancy,
                 "shared": self.shared, "indexed": len(self._block_key),
-                "block_size": self.block_size}
+                "cached": self.cached, "block_size": self.block_size}
 
     def check(self) -> None:
         """Assert the allocator invariants (used by the property suite):
         accounting sums to the pool, holders are unique per block, the
         scratch block is never owned or free-listed, and the index only
-        advertises resident blocks."""
+        advertises resident or cached-free blocks, chained off parents
+        that are themselves indexed (no dangling chains a recycled block
+        id could resurrect)."""
         assert self.used + self.available == self.total, \
             (self.used, self.available, self.total)
         assert SCRATCH_BLOCK not in self._holders
@@ -287,8 +333,11 @@ class BlockPool:
             assert len(set(holders)) == len(holders), (b, holders)
             assert b not in self._free, b
         for b, (parent, tokens) in self._block_key.items():
-            assert b in self._holders, f"index advertises freed block {b}"
+            assert b in self._holders or b in self._free, \
+                f"index advertises unknown block {b}"
             assert tokens, b
+            assert parent is self.ROOT or parent in self._block_key, \
+                f"block {b} chains off unindexed parent {parent}"
         for parent, bucket in self._children.items():
             for b in bucket:
                 assert self._block_key[b][0] == parent

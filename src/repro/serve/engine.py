@@ -38,6 +38,19 @@ Paged engines add two behaviours on top of the block tables:
   transient gather; interpret mode off-TPU) instead of the jnp gather
   reference.
 
+With ``speculation=k`` (and a draft model) the engine decodes
+**speculatively**: each step, a :class:`~repro.serve.spec.DraftRunner`
+proposes k tokens per slot and the target verifies them in ONE
+multi-token step (``model.verify_step``), committing the accepted
+prefix plus a bonus/correction token — up to k+1 tokens per slot per
+target step. Paged slots are granted their window blocks up front (the
+**watermark**; copy-on-write where shared, degraded under pressure)
+and rolled back to the committed length afterwards; greedy acceptance
+is deterministic and the streams are bit-identical to non-speculative
+decode (docs/serving.md, "Speculative decode"). Every emitted token is
+drawn by the per-request sampler (``serve/sampling.py``: greedy /
+temperature / top-k, counter-based keys) and streams with its logprob.
+
 Three properties carry over from the stripe engine and hold in both
 layouts:
 
@@ -72,7 +85,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import sampling
 from repro.serve.blocks import BlockPool
+from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.spec import DraftRunner
 
 _MIN_BUCKET = 8
 
@@ -85,7 +101,12 @@ class Request:
     stop_tokens: tuple = ()         # EOS ids -> early exit
     priority: int = 0               # scheduler tier (higher = more urgent)
     deadline_s: float | None = None  # absolute perf_counter SLO deadline
+    sampling: SamplingParams = GREEDY   # greedy | temperature | top-k
+    speculation: int | None = None  # draft tokens/step; None = engine
+    #                                 default, 0 = opt out of speculation
     out_tokens: list = field(default_factory=list)
+    out_logprobs: list = field(default_factory=list)  # raw log-softmax of
+    #                                 each emitted token, 1:1 with out_tokens
     submitted_s: float = field(default_factory=time.perf_counter)
     done_s: float | None = None
     preemptions: int = 0            # times evicted for recompute readmission
@@ -111,7 +132,8 @@ class ServingEngine:
                  max_seq: int = 256, plan=None, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
                  reserve_blocks: int = 1, prefix_sharing: bool = True,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, draft_model=None,
+                 draft_params=None, speculation: int = 0):
         self.model = model
         self.params = params
         self.B = batch_size
@@ -141,6 +163,27 @@ class ServingEngine:
         self.prefix_sharing = bool(prefix_sharing) and self.paged \
             and not is_moe
         self.use_kernel = bool(use_kernel)
+        # speculative draft-and-verify: a small draft model proposes k
+        # tokens per slot, the target verifies them in one multi-token
+        # step. Pure-attention targets only (the verify window needs the
+        # {k, v} scatter; recurrent state steps token-at-a-time) and
+        # never MoE (the window co-batches k+1 tokens through shared
+        # expert capacity — the standard bit-exactness caveat).
+        self.spec_k = int(speculation)
+        if self.spec_k:
+            if draft_model is None or draft_params is None:
+                raise ValueError("speculation requires a draft model")
+            if not pure_attn:
+                raise ValueError("speculation requires a pure-attention "
+                                 f"{{k, v}} cache; got {sorted(cache_spec)}")
+            if is_moe:
+                raise ValueError("speculation unsupported for MoE targets "
+                                 "(expert-capacity caveat, docs/serving.md)")
+            self.draft = DraftRunner(draft_model, draft_params,
+                                     batch_size=batch_size, max_seq=max_seq,
+                                     plan=plan)
+        else:
+            self.draft = None
         self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
         self.slot_req: list = [None] * batch_size
         # prompt tokens a shared admission still owes the model: fed one
@@ -170,12 +213,14 @@ class ServingEngine:
             self.pool = None
             self.caches = model.init_cache(batch_size, max_seq)
 
-        def admit(p, caches, tokens, last_idx, slots):
+        def admit(p, caches, tokens, last_idx, slots, temps, top_ks,
+                  seeds, ctrs):
             """Batched prefill + device-side stripe insertion.
 
             tokens (k, S) right-padded prompts, last_idx (k,) index of each
-            row's final real token, slots (k,) destination slot per row.
-            Returns (first generated token per row, updated caches).
+            row's final real token, slots (k,) destination slot per row;
+            temps/top_ks/seeds/ctrs (k,) per-row sampling params. Returns
+            (first generated token per row, its logprob, updated caches).
             """
             logits, pref = model.prefill(p, {"tokens": tokens}, plan,
                                          last_idx=last_idx)
@@ -186,13 +231,15 @@ class ServingEngine:
                         (jnp.int32(0),) * (row.ndim - 2)
                     caches[key] = jax.lax.dynamic_update_slice(
                         caches[key], row.astype(caches[key].dtype), start)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, caches
+            nxt, logp = sampling.sample(logits[:, -1, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, caches
 
-        def prefill_paged(p, tokens, last_idx):
+        def prefill_paged(p, tokens, last_idx, temps, top_ks, seeds, ctrs):
             """Batched prefill for the pool path: returns the first token
-            per row and the prefill KV padded (with zeros, never attended)
-            to a block_size multiple so every logical block slices full."""
+            per row (+ logprob) and the prefill KV padded (with zeros,
+            never attended) to a block_size multiple so every logical
+            block slices full."""
             logits, pref = model.prefill(p, {"tokens": tokens}, plan,
                                          last_idx=last_idx)
             pad = (-tokens.shape[1]) % block_size
@@ -200,8 +247,9 @@ class ServingEngine:
                 pref = {key: jnp.pad(pref[key],
                                      ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
                         for key in pref}
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, pref
+            nxt, logp = sampling.sample(logits[:, -1, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, pref
 
         def write_block(caches, pref, row, start, phys):
             """Copy one logical block of row ``row`` of the prefill KV
@@ -219,19 +267,45 @@ class ServingEngine:
                     (jnp.int32(0), phys) + (jnp.int32(0),) * 3)
             return caches
 
-        def decode(p, tok, caches, lengths):
+        def decode(p, tok, caches, lengths, temps, top_ks, seeds, ctrs):
             logits, caches = model.decode_step(p, tok, caches, lengths, plan)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, caches
+            nxt, logp = sampling.sample(logits[:, -1, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, caches
 
         kernel_flag = self.use_kernel
 
-        def decode_paged(p, tok, caches, lengths, table):
+        def decode_paged(p, tok, caches, lengths, table, temps, top_ks,
+                         seeds, ctrs):
             logits, caches = model.decode_step(p, tok, caches, lengths, plan,
                                                block_table=table,
                                                paged_kernel=kernel_flag)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, caches
+            nxt, logp = sampling.sample(logits[:, -1, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, caches
+
+        def verify(p, toks, caches, lengths, dprobs, proposed, n_spec,
+                   temps, top_ks, seeds, ctrs):
+            """Stripe verify: one multi-token step + acceptance."""
+            logits, caches = model.verify_step(p, toks, caches, lengths,
+                                               plan)
+            acc = sampling.speculative_accept(logits, dprobs, proposed,
+                                              n_spec, temps, top_ks, seeds,
+                                              ctrs)
+            return (*acc, caches)
+
+        def verify_paged(p, toks, caches, lengths, table, n_write, dprobs,
+                         proposed, n_spec, temps, top_ks, seeds, ctrs):
+            """Paged verify: the window scatters through the block table
+            (diverted to scratch past each row's granted watermark)."""
+            logits, caches = model.verify_step(p, toks, caches, lengths,
+                                               plan, block_table=table,
+                                               paged_kernel=kernel_flag,
+                                               n_write=n_write)
+            acc = sampling.speculative_accept(logits, dprobs, proposed,
+                                              n_spec, temps, top_ks, seeds,
+                                              ctrs)
+            return (*acc, caches)
 
         def copy_block(caches, src, dst):
             """Copy-on-write: duplicate physical block ``src`` into the
@@ -254,6 +328,8 @@ class ServingEngine:
         self._copy_block = jax.jit(copy_block, donate_argnums=(0,))
         self._decode = jax.jit(decode_paged if self.paged else decode,
                                donate_argnums=(2,))
+        self._verify = jax.jit(verify_paged if self.paged else verify,
+                               donate_argnums=(2,))
         self.metrics = {"prefills": 0, "prefill_batches": 0,
                         "decode_steps": 0, "completed": 0,
                         "stop_token_exits": 0, "slot_reuses": 0,
@@ -261,7 +337,10 @@ class ServingEngine:
                         "preemptions": 0, "shared_admissions": 0,
                         "cow_copies": 0, "cow_parks": 0,
                         "prefill_tokens_computed": 0,
-                        "prefill_tokens_shared": 0}
+                        "prefill_tokens_shared": 0,
+                        "verify_steps": 0, "draft_steps": 0,
+                        "spec_proposed": 0, "spec_accepted": 0,
+                        "spec_blocks_rolled_back": 0}
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -292,12 +371,17 @@ class ServingEngine:
         return req.prompt + req.out_tokens
 
     def _match_cost(self, eff: list):
-        """Resident prefix match for ``eff`` and the admission cost with
-        it: ``(blocks, matched, need)``. ``need`` counts the un-shared
-        blocks plus ONE extra when the match ends inside a partial tail
-        block — the first append must copy-on-write that block, so the
-        gate has to charge the copy up front or a batch of tail-sharing
-        admissions would all park on their first decode step.
+        """Resident-or-cached prefix match for ``eff`` and the admission
+        cost with it: ``(blocks, matched, need)``. ``need`` counts the
+        un-shared blocks, plus one per **cached** matched block (a freed
+        block whose index entry survived — reviving it consumes a free
+        block, so memory-wise it costs like an allocation even though
+        its prefill compute is free), plus ONE extra when the match ends
+        inside a *resident* partial tail block — the first append must
+        copy-on-write that block, so the gate has to charge the copy up
+        front or a batch of tail-sharing admissions would all park on
+        their first decode step. (A cached tail revives sole-owned:
+        writable in place, no copy.)
 
         A match is only *used* when the un-shared suffix is small —
         ``P - m <= max(block_size, m)`` — because the suffix is fed one
@@ -313,22 +397,42 @@ class ServingEngine:
         if m < self.block_size or P - m > max(self.block_size, m):
             return [], 0, full
         need = full - len(blocks)
-        if m % self.block_size:
+        need += sum(1 for b in blocks if self.pool.refcount(b) == 0)
+        if m % self.block_size and self.pool.refcount(blocks[-1]) >= 1:
             need += 1                    # imminent CoW of the shared tail
         return blocks, m, need
+
+    def _spec_window(self, req: Request) -> int:
+        """Write positions one speculative step may need past the
+        committed length: k proposals + the bonus token's scatter site.
+        0 when the engine or the request opts out."""
+        if not self.spec_k:
+            return 0
+        k = self.spec_k if req.speculation is None \
+            else min(req.speculation, self.spec_k)
+        return k + 1 if k > 0 else 0
 
     def blocks_needed(self, req: Request) -> int:
         """Pool blocks this request's admission requires right now — the
         **post-sharing** cost: blocks covered by a resident prefix match
-        are already paid for (reusing them is free; a shared partial
-        tail charges its imminent copy-on-write block). (0 when not
-        paged — stripe admission is gated on free slots alone.)"""
+        are already paid for (reusing them is free; revived cached
+        blocks and a shared partial tail's imminent copy-on-write are
+        charged). A speculating engine additionally charges the
+        request's **speculative watermark** — the blocks its first
+        draft-and-verify window will grow into — so a batch of
+        admissions doesn't pass the gate and then mass-park on its
+        first speculative step. (0 when not paged — stripe admission is
+        gated on free slots alone.)"""
         if not self.paged:
             return 0
         eff = self._eff_prompt(req)
+        P = len(eff)
+        spec = self.pool.blocks_for(min(P + self._spec_window(req),
+                                        self.max_seq)) \
+            - self.pool.blocks_for(P)
         if self.prefix_sharing:
-            return self._match_cost(eff)[2]
-        return self.pool.blocks_for(len(eff))
+            return self._match_cost(eff)[2] + spec
+        return self.pool.blocks_for(P) + spec
 
     def blocks_worst_case(self, req: Request) -> int:
         """Upper bound on the request's block demand, independent of what
@@ -376,6 +480,46 @@ class ServingEngine:
                 # however many tables map it.
                 "logical_blocks": sum(len(b) for b in self.slot_blocks),
                 **self.pool.stats()}
+
+    # --------------------------------------------------------- sampling
+    @staticmethod
+    def _sampling_rows(reqs: list):
+        """Per-row sampling params for a prefill group. The counter is
+        the request's emission index (``len(out_tokens)``) — a pure
+        function of the request, so a sampled stream reproduces across
+        engine configurations and preempted re-admissions."""
+        n = len(reqs)
+        temps = np.zeros(n, np.float32)
+        top_ks = np.zeros(n, np.int32)
+        seeds = np.zeros(n, np.int32)
+        ctrs = np.zeros(n, np.int32)
+        for j, r in enumerate(reqs):
+            sp = r.sampling or GREEDY
+            temps[j] = sp.temperature
+            top_ks[j] = sp.top_k
+            seeds[j] = sp.seed
+            ctrs[j] = len(r.out_tokens)
+        return (jnp.asarray(temps), jnp.asarray(top_ks),
+                jnp.asarray(seeds), jnp.asarray(ctrs))
+
+    def _sampling_slots(self):
+        """Per-slot sampling params for a decode/verify step (greedy
+        defaults for empty slots — their draws are discarded)."""
+        B = self.B
+        temps = np.zeros(B, np.float32)
+        top_ks = np.zeros(B, np.int32)
+        seeds = np.zeros(B, np.int32)
+        ctrs = np.zeros(B, np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            sp = r.sampling or GREEDY
+            temps[i] = sp.temperature
+            top_ks[i] = sp.top_k
+            seeds[i] = sp.seed
+            ctrs[i] = len(r.out_tokens)
+        return (jnp.asarray(temps), jnp.asarray(top_ks),
+                jnp.asarray(seeds), jnp.asarray(ctrs))
 
     # --------------------------------------------------------- admission
     def add_request(self, req: Request) -> bool:
@@ -487,7 +631,13 @@ class ServingEngine:
                     for b in acquired:
                         # commit the match now: holding a reference keeps
                         # the blocks resident (and indexed) however the
-                        # rest of this batch retires or frees
+                        # rest of this batch retires or frees. A revived
+                        # cached block leaves ``planned`` the moment it
+                        # leaves the free list — ``need`` charged it, and
+                        # pool.available now reflects it, so keeping both
+                        # would double-count it against later picks.
+                        if self.pool.refcount(b) == 0:
+                            planned -= 1
                         self.pool.acquire(b, owner=slot)
                 if acquired is None and self.prefix_sharing:
                     self._sim_chains(eff, sim)
@@ -522,19 +672,22 @@ class ServingEngine:
                 toks[j, :len(eff)] = eff
                 last[j] = len(eff) - 1
                 slots[j] = slot
+            samp = self._sampling_rows([req for req, _ in members])
             if self.paged:
-                nxt, pref = self._prefill_paged(
-                    self.params, jnp.asarray(toks), jnp.asarray(last))
+                nxt, logp, pref = self._prefill_paged(
+                    self.params, jnp.asarray(toks), jnp.asarray(last),
+                    *samp)
                 for j, (req, slot) in enumerate(members):
                     self._insert_paged(pref, j, slot, self._eff_prompt(req))
             else:
-                nxt, self.caches = self._admit(
+                nxt, logp, self.caches = self._admit(
                     self.params, self.caches, jnp.asarray(toks),
-                    jnp.asarray(last), jnp.asarray(slots))
-            nxt = np.asarray(nxt)
+                    jnp.asarray(last), jnp.asarray(slots), *samp)
+            nxt, logp = np.asarray(nxt), np.asarray(logp)
             for j, (req, slot) in enumerate(members):
                 P = len(self._eff_prompt(req))
                 req.out_tokens.append(int(nxt[j]))
+                req.out_logprobs.append(float(logp[j]))
                 if slot in self._used_slots:
                     self.metrics["slot_reuses"] += 1
                 self._used_slots.add(slot)
@@ -554,6 +707,22 @@ class ServingEngine:
             if acquired is None:
                 continue
             self._admit_shared(req, slot, acquired, matched)
+        if self.draft is not None:
+            # the draft model caches every admitted prompt too (shared
+            # admissions included: the draft has no shared blocks, its
+            # stripes are per-slot) — skipping slots that retired at
+            # admission (stop token / max_new in the first token). The
+            # draft caches everything but the newest committed token
+            # (plain admissions just emitted one), which the proposal
+            # loop feeds to draw the first proposal.
+            members = []
+            for req, slot, _, _ in take:
+                if self.slot_req[slot] is not req:
+                    continue
+                eff = self._eff_prompt(req)
+                members.append((slot, eff[:-1] if req.out_tokens else eff))
+            if members:
+                self.draft.admit(members)
         return len(take) - n_from_waiting
 
     def _extend_match(self, eff: list, slot: int, blocks: list,
@@ -613,10 +782,12 @@ class ServingEngine:
             # solo plain prefill)
             toks = np.asarray([eff], np.int32)
             last = np.asarray([P - 1], np.int32)
-            nxt, pref = self._prefill_paged(
-                self.params, jnp.asarray(toks), jnp.asarray(last))
+            nxt, logp, pref = self._prefill_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(last),
+                *self._sampling_rows([req]))
             self._insert_paged(pref, 0, slot, eff)
             req.out_tokens.append(int(np.asarray(nxt)[0]))
+            req.out_logprobs.append(float(np.asarray(logp)[0]))
             self.slot_req[slot] = req
             self.slot_len[slot] = P
             self.metrics["prefill_batches"] += 1
@@ -687,6 +858,8 @@ class ServingEngine:
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
         self._release_blocks(slot)
+        if self.draft is not None:
+            self.draft.reset(slot)
         self.metrics["completed"] += 1
         if req.finished_by_stop and len(req.out_tokens) < req.max_new_tokens:
             self.metrics["stop_token_exits"] += 1
@@ -704,27 +877,26 @@ class ServingEngine:
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
         self._release_blocks(slot)
+        if self.draft is not None:
+            self.draft.reset(slot)
         self._waiting.append(req)
         self.metrics["preemptions"] += 1
 
-    def _grow_or_park(self, active: list) -> list:
-        """Make every active slot's next-token write site safe: grow a
-        block at a boundary, **copy-on-write** a shared tail before the
-        scatter would land in it, and drop stale prefix-index entries for
-        in-place writes. Slots the pool cannot serve park (skip this
-        step, state intact). If nobody can advance, preempt newest
-        admissions until the oldest can."""
-        def grow(i) -> bool:
-            bi = int(self.slot_len[i]) // self.block_size
-            if bi >= len(self.slot_blocks[i]):
-                got = self.pool.alloc(1, owner=i)
-                if got is None:
-                    return False
-                self.slot_blocks[i].extend(got)
-                self.block_table[i, len(self.slot_blocks[i]) - 1] = got[0]
-                self.metrics["blocks_grown"] += 1
-                return True
-            b = self.slot_blocks[i][bi]
+    def _ensure_writable(self, i: int, width: int) -> int:
+        """Make positions ``[len, len + width)`` of slot ``i`` safe to
+        scatter into: **copy-on-write** a shared tail before any write
+        would land in it, drop stale prefix-index entries for in-place
+        writes, and allocate blocks through the window's last position
+        (the speculative **watermark** — ``width = n_spec + 1`` for a
+        speculating slot, 1 otherwise). Returns how many positions were
+        actually secured: the full width, a degraded count when the pool
+        ran out mid-window (the engine speculates less), or 0 — the slot
+        cannot even take its next single token and must park."""
+        L = int(self.slot_len[i])
+        bs = self.block_size
+        first_bi = L // bs
+        if first_bi < len(self.slot_blocks[i]):
+            b = self.slot_blocks[i][first_bi]
             if not self.pool.writable(b):
                 # shared tail: writing in place would corrupt the other
                 # holders' KV — duplicate the block on device, swap our
@@ -736,23 +908,47 @@ class ServingEngine:
                     # SHARED block, the parked write would land in it and
                     # corrupt the other holders' KV (restored below once
                     # the copy, or sole ownership, arrives)
-                    self.block_table[i, bi] = 0
+                    self.block_table[i, first_bi] = 0
                     self.metrics["cow_parks"] += 1
-                    return False
+                    return 0
                 self.caches = self._copy_block(self.caches, np.int32(b),
                                                np.int32(got[0]))
                 self.pool.free([b], owner=i)
-                self.slot_blocks[i][bi] = got[0]
+                self.slot_blocks[i][first_bi] = got[0]
                 self.metrics["cow_copies"] += 1
                 b = got[0]
-            self.block_table[i, bi] = b      # also restores a CoW park
-            self.pool.prepare_write(b, int(self.slot_len[i])
-                                    % self.block_size)
-            return True
+            self.block_table[i, first_bi] = b    # also restores a CoW park
+            self.pool.prepare_write(b, L % bs)
+        last_bi = (L + width - 1) // bs
+        while last_bi >= len(self.slot_blocks[i]):
+            bi = len(self.slot_blocks[i])
+            got = self.pool.alloc(1, owner=i)
+            if got is None:
+                # secured everything below the unallocated block: the
+                # window shrinks (0 when even position L has no block)
+                return max(bi * bs - L, 0)
+            self.slot_blocks[i].extend(got)
+            self.block_table[i, bi] = got[0]
+            self.metrics["blocks_grown"] += 1
+        return width
 
-        parked = [i for i in list(active) if not grow(i)]
-        for i in parked:
-            active.remove(i)
+    def _grow_or_park(self, active: list, want: dict | None = None) -> dict:
+        """Make every active slot's write site(s) safe — ``want[i]``
+        positions for a speculating slot (its watermark), one otherwise.
+        Slots the pool cannot serve at all park (skip this step, state
+        intact); slots it can only partially serve speculate less. If
+        nobody can advance, preempt newest admissions until the oldest
+        can. Returns {slot: positions secured} (parked slots are removed
+        from ``active`` and absent)."""
+        secured: dict = {}
+        parked = []
+        for i in list(active):
+            got = self._ensure_writable(i, (want or {}).get(i, 1))
+            if got == 0:
+                parked.append(i)
+                active.remove(i)
+            else:
+                secured[i] = got
         if parked and not active:
             # total stall: every active slot needs a block and none is
             # free (all blocks are held by the stalled slots themselves).
@@ -761,10 +957,12 @@ class ServingEngine:
                 victim = order.pop()            # newest admission recomputes
                 parked.remove(victim)
                 self._preempt(victim)
-                if grow(order[0]):              # oldest advances first
+                got = self._ensure_writable(order[0], 1)
+                if got:                         # oldest advances first
                     oldest = order.pop(0)
                     parked.remove(oldest)
                     active.append(oldest)
+                    secured[oldest] = got
                     break
             if len(order) == 1 and not active:
                 # one slot owns the whole pool and still needs more:
@@ -774,12 +972,116 @@ class ServingEngine:
                 self._finished_at_admit.append(self.slot_req[i])
                 self._retire(i)
         self.metrics["parked_slot_steps"] += len(parked)
-        return parked
+        return secured
+
+    def _rollback(self, i: int) -> None:
+        """Speculative rollback: return pool blocks past the committed
+        length to the pool. Every freed block was allocated for this
+        slot's watermark *this or an earlier speculative step* and is
+        sole-owned (the window was made writable — copied-on-write out
+        of any sharing — before the verify scatter), so no co-holder's
+        chain is ever rolled back."""
+        keep = self.pool.blocks_for(max(int(self.slot_len[i]), 1))
+        extra = self.slot_blocks[i][keep:]
+        if extra:
+            self.pool.free(extra, owner=i)
+            del self.slot_blocks[i][keep:]
+            self.block_table[i, keep:] = 0
+            self.metrics["spec_blocks_rolled_back"] += len(extra)
+
+    def _spec_step(self, active: list, n_spec, finished: list) -> list:
+        """One draft-and-verify step. ``n_spec[i]`` proposals for each
+        speculating slot (0 for riders: pending catch-up, opted-out, or
+        watermark-degraded slots — they feed one real token through the
+        same verify batch and advance by one, exactly the plain step).
+        Commits each row's accepted prefix + bonus token, rolls the pool
+        back to the committed watermark, and advances the draft."""
+        k = self.spec_k
+        temps, top_ks, seeds, ctrs = self._sampling_slots()
+        rows = [i for i in active if n_spec[i] > 0]
+        # the draft only needs each row's UNCACHED committed suffix (at
+        # most ~2 tokens between rounds) — not an O(prompt + generated)
+        # rebuild of the whole context per step
+        tails = [None] * self.B
+        totals = np.zeros(self.B, np.int64)
+        for i in rows:
+            r = self.slot_req[i]
+            dl, P = int(self.draft.len[i]), len(r.prompt)
+            tails[i] = (r.prompt[dl:] + r.out_tokens) if dl < P \
+                else r.out_tokens[dl - P:]
+            totals[i] = P + len(r.out_tokens)
+        proposed, dprobs = self.draft.propose(tails, rows, k, temps,
+                                              top_ks, seeds, ctrs)
+        self.metrics["draft_steps"] = self.draft.steps_run
+        toks = np.zeros((self.B, k + 1), np.int32)
+        n_write = np.zeros(self.B, np.int32)
+        for i in active:
+            r = self.slot_req[i]
+            toks[i, 0] = self.slot_pending[i][0] if self.slot_pending[i] \
+                else r.out_tokens[-1]
+            toks[i, 1:] = proposed[i]
+            n_write[i] = n_spec[i] + 1
+        ns = jnp.asarray(np.asarray(n_spec, np.int32))
+        if self.paged:
+            a, out_toks, lps, self.caches = self._verify(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.slot_len), jnp.asarray(self.block_table),
+                jnp.asarray(n_write), dprobs, jnp.asarray(proposed), ns,
+                temps, top_ks, seeds, ctrs)
+        else:
+            a, out_toks, lps, self.caches = self._verify(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.slot_len), dprobs, jnp.asarray(proposed),
+                ns, temps, top_ks, seeds, ctrs)
+        self.metrics["decode_steps"] += 1
+        self.metrics["verify_steps"] += 1
+        a, out_toks, lps = np.asarray(a), np.asarray(out_toks), \
+            np.asarray(lps)
+        for i in active:
+            r = self.slot_req[i]
+            if self.slot_pending[i]:
+                # catch-up rider: the fed token was a *prompt* token —
+                # its sampled successor only counts once the un-shared
+                # suffix is exhausted
+                self.slot_len[i] += 1
+                self.slot_pending[i].pop(0)
+                if self.paged:
+                    self._rollback(i)
+                if self.slot_pending[i]:
+                    continue
+                commit = [int(out_toks[i, 0])]
+                lpc = [float(lps[i, 0])]
+            else:
+                ai = int(min(a[i], n_spec[i]))
+                self.slot_len[i] += ai + 1
+                commit = [int(t) for t in out_toks[i, :ai + 1]]
+                lpc = [float(x) for x in lps[i, :ai + 1]]
+                if n_spec[i] > 0:
+                    self.metrics["spec_proposed"] += int(n_spec[i])
+                    self.metrics["spec_accepted"] += ai
+                    # draft cache valid through the accepted prefix; it
+                    # only ever cached through proposal k-1
+                    self.draft.commit(i, int(totals[i]) + min(ai, k - 1))
+                if self.paged:
+                    self._rollback(i)
+            room = r.max_new_tokens - len(r.out_tokens)
+            commit = commit[:room]
+            for t_idx, t in enumerate(commit):
+                if t in r.stop_tokens:       # stop inside the window
+                    commit = commit[:t_idx + 1]
+                    break
+            r.out_tokens.extend(commit)
+            r.out_logprobs.extend(lpc[:len(commit)])
+            if self._is_done(r):
+                finished.append(r)
+                self._retire(i)
+        return finished
 
     def step(self) -> list:
-        """One decode step over all active slots (each at its own length).
-        Parked slots ride the batch but emit nothing. Returns finished
-        requests."""
+        """One decode step over all active slots (each at its own length)
+        — a draft-and-verify multi-token step when the engine speculates
+        and any slot has room to. Parked slots ride the batch but emit
+        nothing. Returns finished requests."""
         finished, self._finished_at_admit = self._finished_at_admit, []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -790,12 +1092,34 @@ class ServingEngine:
                 finished.append(self.slot_req[i])
                 self._retire(i)
                 active.remove(i)
+        # plan speculative windows before securing write sites, so the
+        # watermark (window) blocks are granted in the same pass
+        n_spec = np.zeros(self.B, np.int32)
+        if self.spec_k:
+            for i in active:
+                r = self.slot_req[i]
+                if self.slot_pending[i]:
+                    continue                  # catch-up rides plain
+                k = self._spec_window(r) - 1
+                if k <= 0:
+                    continue
+                n_spec[i] = max(0, min(
+                    k, self.max_seq - 1 - int(self.slot_len[i]),
+                    r.max_new_tokens - len(r.out_tokens) - 1))
         if self.paged and active:
-            self._grow_or_park(active)
+            want = {i: int(n_spec[i]) + 1 for i in active} \
+                if n_spec.any() else None
+            secured = self._grow_or_park(active, want)
+            for i in active:
+                # pool pressure degrades the window (possibly to 0: the
+                # slot rides this step non-speculatively)
+                n_spec[i] = min(n_spec[i], secured[i] - 1)
             finished.extend(self._finished_at_admit)
             self._finished_at_admit = []
         if not active:
             return finished
+        if self.spec_k and any(n_spec[i] > 0 for i in active):
+            return self._spec_step(active, n_spec, finished)
         tok = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):
             if r is None:
@@ -804,16 +1128,18 @@ class ServingEngine:
                 tok[i, 0] = self.slot_pending[i][0]   # catch-up prompt token
             else:
                 tok[i, 0] = r.out_tokens[-1]
+        samp = self._sampling_slots()
         if self.paged:
-            nxt, self.caches = self._decode(
+            nxt, logp, self.caches = self._decode(
                 self.params, jnp.asarray(tok), self.caches,
-                jnp.asarray(self.slot_len), jnp.asarray(self.block_table))
+                jnp.asarray(self.slot_len), jnp.asarray(self.block_table),
+                *samp)
         else:
-            nxt, self.caches = self._decode(self.params, jnp.asarray(tok),
-                                            self.caches,
-                                            jnp.asarray(self.slot_len))
+            nxt, logp, self.caches = self._decode(
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.asarray(self.slot_len), *samp)
         self.metrics["decode_steps"] += 1
-        nxt = np.asarray(nxt)
+        nxt, logp = np.asarray(nxt), np.asarray(logp)
         for i in active:
             r = self.slot_req[i]
             self.slot_len[i] += 1
@@ -821,11 +1147,12 @@ class ServingEngine:
                 # a shared admission catching up on its un-shared prompt
                 # suffix: the fed token was a *prompt* token, so its
                 # logits only matter once the suffix is exhausted — then
-                # the argmax is the first genuinely generated token
+                # the sample is the first genuinely generated token
                 self.slot_pending[i].pop(0)
                 if self.slot_pending[i]:
                     continue
             r.out_tokens.append(int(nxt[i]))
+            r.out_logprobs.append(float(logp[i]))
             if self._is_done(r):
                 finished.append(r)
                 self._retire(i)

@@ -1,0 +1,211 @@
+"""On-device token sampling for the serving engine.
+
+Greedy argmax was baked into the engine's jitted closures; this module
+replaces it with a per-slot parameterized sampler that stays inside the
+jit. Three knobs per request (:class:`SamplingParams`):
+
+* ``temperature`` — 0 selects deterministic argmax (the default and the
+  tier-1-testable mode); > 0 scales logits before the categorical draw.
+* ``top_k`` — 0 keeps the full vocabulary; k restricts the draw to the
+  k highest-scoring tokens (ties at the k-th value are all kept).
+* ``seed`` — the request's private randomness stream.
+
+**Counter-based keys.** The key for a request's n-th emitted token is
+``fold_in(fold_in(key(seed), tag), n)`` — a pure function of the
+request's seed and the emission index, never of engine state. That is
+what makes sampled streams *reproducible across engine configurations*:
+a request emits the same tokens whether it decodes solo or co-batched,
+paged or striped, shared-prefix or not — the batching properties the
+engine already proves for greedy extend to sampled mode for free. The
+engine threads ``(temps, top_ks, seeds, ctrs)`` vectors into its jitted
+closures; no key ever lives in engine state. (One carve-out: a row that
+actually *speculates* consumes the separate accept stream for its
+accept/residual draws — its sampled stream is reproducible per
+(seed, speculation) pair, not across speculation settings. Rows riding
+a verify batch non-speculatively stay on the token stream, so opting
+out of speculation — or never being granted a window — changes
+nothing.)
+
+Per-token **logprobs** fall out of the same softmax: every sample
+returns ``log_softmax(logits)[token]`` — the *raw* model logprob
+(before temperature/top-k shaping), the conventional serving-API
+number — and the engine streams it next to the token.
+
+**Speculative acceptance** (:func:`speculative_accept`). The verify
+step hands this function target logits for ``k+1`` positions, the draft
+model's proposal distributions, and the proposed tokens; it returns how
+many leading proposals each row commits plus the bonus/correction
+token:
+
+* greedy rows (temperature 0): accept while the proposal equals the
+  target argmax — deterministic, and the committed stream is exactly
+  the non-speculative greedy stream;
+* sampled rows: classic acceptance sampling — accept ``d_j`` with
+  probability ``min(1, p(d_j) / q(d_j))`` (``p`` target, ``q`` draft,
+  both *after* temperature/top-k shaping), and on first rejection draw
+  the correction from the residual ``normalize(max(p - q, 0))``, so the
+  committed tokens are distributed exactly as non-speculative sampling
+  from the target (Leviathan et al. 2023) even though the draft
+  proposed them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# fold_in tags separating the independent randomness streams a request
+# consumes (token draws vs draft proposals vs accept/residual draws)
+TOKEN_STREAM = 0
+ACCEPT_STREAM = 1
+DRAFT_STREAM = 2
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs. The default is greedy argmax."""
+    temperature: float = 0.0
+    top_k: int = 0                 # 0 = full vocabulary
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def _key(seed, stream, ctr):
+    return jax.random.fold_in(jax.random.fold_in(
+        jax.random.key(seed), stream), ctr)
+
+
+def _shaped_logits(logits, temp, top_k):
+    """Temperature + top-k shaping of one row's logits (V,) in f32.
+    temp <= 0 (greedy) is the caller's branch; here temp is clamped so
+    the division stays finite under vmap either way."""
+    x = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+    V = x.shape[-1]
+    # top_k = 0 (off) keeps everything: threshold at the global min.
+    sorted_desc = jnp.sort(x)[::-1]
+    kth = sorted_desc[jnp.clip(top_k - 1, 0, V - 1)]
+    thresh = jnp.where(top_k > 0, kth, sorted_desc[-1])
+    return jnp.where(x >= thresh, x, jnp.finfo(jnp.float32).min)
+
+
+def _sample_row(logits, temp, top_k, seed, ctr):
+    """One row: (V,) logits -> (token, raw logprob of that token)."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
+    drawn = jax.random.categorical(
+        _key(seed, TOKEN_STREAM, ctr),
+        _shaped_logits(logits, temp, top_k)).astype(jnp.int32)
+    tok = jnp.where(temp <= 0.0, greedy_tok, drawn)
+    return tok, logp[tok]
+
+
+def sample(logits, temps, top_ks, seeds, ctrs):
+    """Batched sampling: logits (B, V); temps/top_ks/seeds/ctrs (B,).
+    Returns (tokens (B,) int32, logprobs (B,) f32 — raw log-softmax of
+    the chosen token). Pure function of its inputs: jit/vmap-safe, and
+    deterministic per (seed, ctr) pair."""
+    return jax.vmap(_sample_row)(logits, temps, top_ks, seeds, ctrs)
+
+
+def _draft_row(logits, temp, top_k, seed, ctr, pos):
+    """One draft proposal: (token, shaped proposal distribution)."""
+    logits = logits.astype(jnp.float32)
+    shaped = _shaped_logits(logits, temp, top_k)
+    key = jax.random.fold_in(_key(seed, DRAFT_STREAM, ctr), pos)
+    drawn = jax.random.categorical(key, shaped).astype(jnp.int32)
+    tok = jnp.where(temp <= 0.0, jnp.argmax(logits).astype(jnp.int32),
+                    drawn)
+    return tok, jax.nn.softmax(shaped)
+
+
+def draft_propose(logits, temps, top_ks, seeds, ctrs, pos):
+    """Draw the draft model's proposal ``pos`` (0..k-1) of the round at
+    emission counter ``ctrs``: logits (B, V) -> (tokens (B,), probs
+    (B, V) f32 — the shaped distribution each token was drawn from,
+    which acceptance sampling needs as ``q``). The key stream is
+    disjoint from both the token draws and the accept/residual draws,
+    and unique per (request, round, position)."""
+    return jax.vmap(_draft_row)(logits, temps, top_ks, seeds, ctrs, pos)
+
+
+# ------------------------------------------------------- speculative accept
+def _accept_row(tlogits, dprobs, proposed, n_spec, temp, top_k, seed, ctr):
+    """One row of speculative acceptance.
+
+    tlogits (S, V): target logits at positions [L, L+S); position j's
+    logits condition on the committed token plus proposals d_1..d_j.
+    dprobs (S-1, V): the draft's (shaped) proposal distributions;
+    proposed (S-1,): the draft's proposals d_1..d_{k}. n_spec: how many
+    proposals this row actually speculated (0..S-1).
+
+    Returns (a, tokens (S,), logprobs (S,)): commit ``tokens[:a + 1]``
+    — ``a`` accepted proposals then the bonus/correction token.
+    """
+    S = tlogits.shape[0]
+    k = S - 1
+    tlogits = tlogits.astype(jnp.float32)
+    greedy = temp <= 0.0
+    rider = n_spec == 0
+    tgt_argmax = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)   # (S,)
+    shaped = jax.vmap(lambda l: _shaped_logits(l, temp, top_k))(tlogits)
+    p = jax.nn.softmax(shaped, axis=-1)                           # (S, V)
+    j = jnp.arange(k)
+    q_at = jnp.take_along_axis(dprobs, proposed[:, None], axis=-1)[:, 0]
+    p_at = jnp.take_along_axis(p[:k], proposed[:, None], axis=-1)[:, 0]
+    u = jax.random.uniform(_key(seed, ACCEPT_STREAM, ctr), (k,))
+    ok_sampled = u * q_at <= p_at            # accept iff u <= p/q
+    ok_greedy = proposed == tgt_argmax[:k]
+    ok = jnp.where(greedy, ok_greedy, ok_sampled) & (j < n_spec)
+    a = jnp.sum(jnp.cumprod(ok.astype(jnp.int32))).astype(jnp.int32)
+    # bonus / correction token at position a
+    p_a = p[a]
+    rejected = a < n_spec                    # stopped on a refusal
+    q_a = dprobs[jnp.minimum(a, k - 1)]
+    resid = jnp.maximum(p_a - q_a, 0.0)
+    norm = jnp.sum(resid)
+    resid = jnp.where(rejected & (norm > 0.0), resid / jnp.maximum(norm, 1e-20),
+                      p_a)
+    bkey = jax.random.fold_in(_key(seed, ACCEPT_STREAM, ctr), k)
+    bonus_sampled = jax.random.categorical(
+        bkey, jnp.log(jnp.maximum(resid, 1e-30))).astype(jnp.int32)
+    # a RIDER row (n_spec == 0: opted out, catch-up, or window-degraded)
+    # is a plain decode step riding the verify batch — its draw must
+    # come from the TOKEN stream at the same counter a plain step would
+    # use, or a request's sampled stream would depend on whether its
+    # co-batched neighbors happen to speculate
+    rider_draw = jax.random.categorical(
+        _key(seed, TOKEN_STREAM, ctr), shaped[0]).astype(jnp.int32)
+    bonus = jnp.where(greedy, tgt_argmax[a],
+                      jnp.where(rider, rider_draw, bonus_sampled))
+    pos = jnp.arange(S)
+    tokens = jnp.where(pos < a, jnp.concatenate([proposed, proposed[-1:]]),
+                       jnp.where(pos == a, bonus, 0)).astype(jnp.int32)
+    logp_all = jax.nn.log_softmax(tlogits, axis=-1)               # (S, V)
+    logprobs = jnp.take_along_axis(logp_all, tokens[:, None], axis=-1)[:, 0]
+    return a, tokens, logprobs
+
+
+def speculative_accept(target_logits, draft_probs, proposed, n_spec,
+                       temps, top_ks, seeds, ctrs):
+    """Batched draft-and-verify acceptance.
+
+    target_logits (B, S, V) from the multi-token verify step;
+    draft_probs (B, S-1, V) shaped draft distributions; proposed
+    (B, S-1) draft tokens; n_spec (B,) proposals actually speculated per
+    row (rows riding the verify batch non-speculatively pass 0 and get
+    exactly one sampled token back). Returns (accepted (B,), tokens
+    (B, S), logprobs (B, S)): row b commits ``tokens[b, :accepted[b]+1]``.
+    Greedy rows are deterministic: accepted proposals are precisely the
+    leading target argmaxes, the correction IS the target argmax, so the
+    committed stream equals non-speculative greedy decode token-for-token.
+    """
+    return jax.vmap(_accept_row)(target_logits, draft_probs, proposed,
+                                 n_spec, temps, top_ks, seeds, ctrs)

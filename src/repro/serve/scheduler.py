@@ -34,11 +34,16 @@ longer the only shedding trigger; memory is.
 
 Block demand is the engine's ``blocks_needed`` — the **post-sharing**
 cost when prefix sharing is on (a prompt whose prefix is already
-resident only pays for its un-shared suffix), so a queue of
+resident only pays for its un-shared suffix, with revived cached-free
+blocks and imminent copy-on-writes charged), **plus the speculative
+watermark** on a speculating engine: the blocks a request's first
+draft-and-verify window will grow into, so a fill batch doesn't pass
+the gate and then mass-park on its first speculative step. A queue of
 template-sharing requests is neither over-gated nor over-shed. The
 never-servable check at submit keeps the worst-case bound
 (``blocks_worst_case``): a prefix match may be gone by the time a
-preempted request re-admits.
+preempted request re-admits — and a window the pool cannot grant only
+degrades speculation, never serviceability.
 """
 from __future__ import annotations
 

@@ -22,6 +22,7 @@ from repro.core.balancer import deploy
 from repro.core.services import (Replica, RequestError, Service,
                                  ServiceError)
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.scheduler import Scheduler
 
 
@@ -45,11 +46,34 @@ class LMReplica:
     def __call__(self, payload: dict) -> dict:
         with self._lock:                   # one engine = one decode stream
             self._rid += 1
+            samp = payload.get("sampling", GREEDY)
+            if isinstance(samp, dict):
+                try:
+                    samp = SamplingParams(**samp)
+                except TypeError as e:
+                    # client error: no other replica can parse it either
+                    raise RequestError(f"{self.name}: bad sampling "
+                                       f"params {samp!r}: {e}") from e
+            if not isinstance(samp, SamplingParams):
+                raise RequestError(f"{self.name}: \"sampling\" must be a "
+                                   f"dict or SamplingParams, got "
+                                   f"{type(samp).__name__}")
+            spec = payload.get("speculation")
+            if spec is not None and (isinstance(spec, bool)
+                                     or not isinstance(spec, int)
+                                     or spec < 0):
+                # same client-error contract as "sampling": a value the
+                # engine would choke on mid-tick must not look like a
+                # replica failure to the balancer
+                raise RequestError(f"{self.name}: \"speculation\" must be "
+                                   f"a non-negative int, got {spec!r}")
             req = Request(rid=self._rid, prompt=list(payload["prompt"]),
                           max_new_tokens=payload.get("max_new_tokens", 8),
                           stop_tokens=tuple(payload.get("stop_tokens", ())),
                           priority=payload.get("priority", 0),
-                          deadline_s=payload.get("deadline_s"))
+                          deadline_s=payload.get("deadline_s"),
+                          sampling=samp,
+                          speculation=payload.get("speculation"))
             # client errors: no other replica can serve these either, so
             # they must NOT look like replica failures to the balancer
             eng = self.scheduler.engine
@@ -72,7 +96,9 @@ class LMReplica:
             if not hit:                    # shed after admission (deadline)
                 raise RequestError(f"{self.name}: request {req.rid} shed "
                                    f"past its deadline")
-            return {"tokens": hit[0].out_tokens, "latency_s": hit[0].latency_s,
+            return {"tokens": hit[0].out_tokens,
+                    "logprobs": hit[0].out_logprobs,
+                    "latency_s": hit[0].latency_s,
                     "replica": self.name}
 
 
@@ -86,7 +112,8 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                     num_blocks: int | None = None,
                     pressure_shed: float | None = None,
                     prefix_sharing: bool = True,
-                    use_kernel: bool = False) -> Service:
+                    use_kernel: bool = False, draft_model=None,
+                    draft_params=None, speculation: int = 0) -> Service:
     """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
     optionally registered with a Supervisor (started in priority order).
 
@@ -96,14 +123,22 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
     ``prefix_sharing`` lets admissions reuse resident prompt-prefix
     blocks copy-on-write (on by default for non-MoE paged engines);
     ``use_kernel`` switches paged decode from the jnp gather to the
-    in-place Pallas paged-attention kernel (interpret mode off-TPU)."""
+    in-place Pallas paged-attention kernel (interpret mode off-TPU).
+    ``draft_model``/``draft_params``/``speculation=k`` arm speculative
+    draft-and-verify decode: every replica owns a draft replica of the
+    small model and verifies its k proposals per slot in one multi-token
+    target step (requests opt out — or down — with a ``"speculation"``
+    payload key; ``"sampling"`` carries per-request
+    temperature/top_k/seed, and the reply streams per-token logprobs)."""
     replicas = []
     for i in range(n_replicas):
         eng = ServingEngine(model, params, batch_size=batch_size,
                             max_seq=max_seq, plan=plan, paged=paged,
                             block_size=block_size, num_blocks=num_blocks,
                             prefix_sharing=prefix_sharing,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, draft_model=draft_model,
+                            draft_params=draft_params,
+                            speculation=speculation)
         sched = Scheduler(eng, policy=policy, max_queue=max_queue,
                           pressure_shed=pressure_shed)
         lm = LMReplica(f"{name}/{i}", sched)

@@ -1,0 +1,27 @@
+"""Speculative multi-token decode: draft-and-verify serving.
+
+Two models cooperate inside one engine step — the paper's
+parallel-models story made hardware-efficient. A small **draft** model
+proposes ``k`` tokens per slot (k cheap sequential steps on a tiny
+model); the **target** model verifies all proposals in ONE batched
+multi-token step (``Model.verify_step``, q_len = k+1 with causal
+masking inside the window) and commits the accepted prefix plus a
+bonus/correction token, so every target step can emit *several* tokens.
+
+* :class:`~repro.serve.spec.draft.DraftRunner` — owns the draft
+  model's slot-parallel KV stripes, batched prompt prefill, and the
+  catch-up + proposal loop.
+* Acceptance lives in :mod:`repro.serve.sampling`
+  (``speculative_accept``): greedy exact-match (deterministic — streams
+  bit-identical to non-speculative greedy decode) or acceptance
+  sampling against the draft's proposal distributions.
+* The paged-KV **watermark/rollback** protocol lives in the engine:
+  blocks for the speculative window are granted (copy-on-write where
+  shared) *before* the verify step, and blocks past the accepted
+  length are returned to the pool after it.
+
+See docs/serving.md ("Speculative decode") for the full protocol.
+"""
+from repro.serve.spec.draft import DraftRunner
+
+__all__ = ["DraftRunner"]

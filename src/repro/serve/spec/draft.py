@@ -1,0 +1,179 @@
+"""DraftRunner: the small proposer model inside a speculative engine.
+
+One runner owns the draft model's decode state for every engine slot —
+a **fixed-stripe** cache (``draft_model.init_cache(B, max_seq)``): the
+draft is small by construction, so a max_seq stripe per slot is cheap,
+and stripe rollback is free (truncate the valid length; junk past it is
+never attended and is overwritten by the next write at that position,
+the same invariant the target engine already proves for mixed-length
+decode). The target's paged pool needs real block rollback; the draft
+does not.
+
+Per speculative round the runner feeds, batched across slots, each
+proposing row's **catch-up tokens** (committed tokens the draft has not
+cached yet — the previous round's bonus/correction token, plus the last
+proposal when everything was accepted; at most 2) followed by ``k``
+**proposal** draws. Rows not proposing this round ride the batch with
+their writes landing harmlessly past their own valid stripe extent.
+Proposals are drawn with the *request's* sampling params (greedy rows
+propose the draft argmax) from a dedicated key stream, and every
+proposal's shaped distribution is returned for acceptance sampling.
+
+The engine owns commit/rollback: after acceptance it calls
+:meth:`commit` with the new valid draft length (cached committed
+prefix), and :meth:`reset` when a slot retires or is preempted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import sampling
+
+_MIN_BUCKET = 8     # matches the engine's smallest prefill bucket
+
+
+class DraftRunner:
+    def __init__(self, model, params, *, batch_size: int, max_seq: int,
+                 plan=None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.plan = plan
+        cache_spec = jax.eval_shape(lambda: model.init_cache(1, _MIN_BUCKET))
+        if not set(cache_spec) <= {"k", "v"}:
+            # the runner's whole rollback story is stripe semantics:
+            # rejected proposals leave junk KV past the valid length,
+            # truncating `len` rewinds. Recurrent state (rwkv / hybrid
+            # SSM) has no positions to truncate — rejected proposals
+            # would corrupt it irreversibly and acceptance would decay
+            # to zero, silently turning speculation into pure overhead.
+            raise ValueError("draft model must have a pure-attention "
+                             "{k, v} cache (rollback is truncate-only); "
+                             f"got leaves {sorted(cache_spec)}")
+        self.caches = model.init_cache(batch_size, max_seq)
+        self.len = np.zeros(batch_size, np.int32)   # valid cached tokens
+        self.steps_run = 0                          # draft decode steps
+
+        def admit(p, caches, tokens, last_idx, slots):
+            """Batched draft prefill + stripe insertion (device-side,
+            caches donated) — the engine admit path minus the sampled
+            first token: the draft never emits, it only caches."""
+            _, pref = model.prefill(p, {"tokens": tokens}, plan,
+                                    last_idx=last_idx)
+            for j in range(tokens.shape[0]):
+                for key in caches:
+                    row = jax.lax.dynamic_slice_in_dim(pref[key], j, 1,
+                                                       axis=1)
+                    start = (jnp.int32(0), slots[j]) + \
+                        (jnp.int32(0),) * (row.ndim - 2)
+                    caches[key] = jax.lax.dynamic_update_slice(
+                        caches[key], row.astype(caches[key].dtype), start)
+            return caches
+
+        def step(p, tok, caches, lengths, temps, top_ks, seeds, ctrs, pos):
+            """One draft decode step: returns (proposal (B,), shaped
+            proposal probs (B, V) f32, caches)."""
+            logits, caches = model.decode_step(p, tok, caches, lengths,
+                                               plan)
+            nxt, probs = sampling.draft_propose(logits[:, -1, :], temps,
+                                                top_ks, seeds, ctrs, pos)
+            return nxt, probs, caches
+
+        self._admit = jax.jit(admit, donate_argnums=(1,))
+        self._step = jax.jit(step, donate_argnums=(2,))
+
+    # --------------------------------------------------------- admission
+    def admit(self, members: list) -> None:
+        """Prefill the draft cache for freshly admitted slots.
+        ``members``: list of (slot, prompt tokens). Prompts are grouped
+        by power-of-two bucket (a {k, v} cache tolerates right-padding;
+        an MoE draft's pad perturbation only nudges *proposals*, never
+        target correctness) and each group prefills as one batched
+        call."""
+        # the ENGINE's bucket rule, lazily imported (engine imports this
+        # module at load time): draft prefill shapes must track target
+        # prefill shapes so a policy change never diverges the two
+        from repro.serve.engine import _bucket
+        groups: dict = {}
+        for slot, eff in members:
+            key = _bucket(len(eff), self.max_seq)
+            groups.setdefault(key, []).append((slot, eff))
+        for width, group in groups.items():
+            toks = np.zeros((len(group), width), np.int32)
+            last = np.zeros(len(group), np.int32)
+            slots = np.zeros(len(group), np.int32)
+            for j, (slot, eff) in enumerate(group):
+                toks[j, :len(eff)] = eff
+                last[j] = len(eff) - 1
+                slots[j] = slot
+            self.caches = self._admit(self.params, self.caches,
+                                      jnp.asarray(toks), jnp.asarray(last),
+                                      jnp.asarray(slots))
+        for slot, eff in members:
+            self.len[slot] = len(eff)
+
+    # --------------------------------------------------------- proposals
+    def propose(self, tails: list, rows: list, k: int, temps, top_ks,
+                seeds, ctrs):
+        """Catch-up + propose ``k`` tokens for each slot in ``rows``.
+
+        tails[i]: the committed tokens slot i's draft cache has NOT seen
+        yet, ending with the newest committed token (never empty for a
+        proposing row; None for the rest — the engine hands over only
+        the uncached suffix, so this is O(catch), not O(context)).
+        Returns (proposed (B, k) int32 host array, draft_probs
+        (B, k, V) device array — the shaped distribution each proposal
+        was drawn from).
+        """
+        B, L = self.B, self.len
+        catch = np.ones(B, np.int64)
+        for i in rows:
+            catch[i] = len(tails[i])
+            assert catch[i] >= 1, (i, int(L[i]))
+        steps = int(max(catch[i] for i in rows)) - 1 + k
+        proposed = np.zeros((B, k), np.int32)
+        probs_steps = []
+        tok = np.zeros((B, 1), np.int32)
+        last = np.zeros(B, np.int32)
+        for t in range(steps):
+            pos = np.zeros(B, np.int32)
+            for i in rows:
+                c = int(catch[i])
+                if t <= c - 1:
+                    tok[i, 0] = tails[i][t]    # catch-up; last one draws
+                else:                          # the first proposal
+                    tok[i, 0] = last[i]        # previous proposal
+                pos[i] = max(t - (c - 1), 0)
+            nxt, probs, self.caches = self._step(
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.asarray((L + t).astype(np.int32)), temps, top_ks,
+                seeds, ctrs, jnp.asarray(pos))
+            probs_steps.append(probs)
+            nxt = np.asarray(nxt)
+            for i in rows:
+                j = t - (int(catch[i]) - 1)
+                if 0 <= j < k:
+                    proposed[i, j] = nxt[i]
+                last[i] = nxt[i]
+        self.steps_run += steps
+        # per-row gather: row i's proposal j came from step catch_i-1+j
+        all_probs = jnp.stack(probs_steps, axis=1)          # (B, steps, V)
+        idx = np.clip(catch[:, None] - 1 + np.arange(k)[None, :], 0,
+                      steps - 1)
+        draft_probs = jnp.take_along_axis(
+            all_probs, jnp.asarray(idx, jnp.int32)[:, :, None], axis=1)
+        return proposed, draft_probs
+
+    # ------------------------------------------------------- bookkeeping
+    def commit(self, slot: int, valid_len: int) -> None:
+        """Acceptance result for ``slot``: the draft's cache is valid
+        through ``valid_len`` committed tokens (everything past it is a
+        rejected proposal's KV — stripe junk, overwritten by the next
+        catch-up write at that position)."""
+        self.len[slot] = min(valid_len, self.max_seq)
+
+    def reset(self, slot: int) -> None:
+        self.len[slot] = 0

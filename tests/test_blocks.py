@@ -146,7 +146,19 @@ def test_acquire_refcount_and_shared_accounting():
     assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) == b
     pool.free([b], owner="b")
     assert pool.refcount(b) == 0 and pool.available == pool.total
-    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) is None  # freed: dereg'd
+    # freed: the entry survives as a CACHED block until the memory is
+    # actually reused — a sequential same-prefix request can revive it
+    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) == b
+    assert pool.cached == 1
+    pool.acquire(b, owner="c")                # revive: back to refcount 1
+    assert pool.refcount(b) == 1 and pool.used == 1 and pool.cached == 0
+    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) == b
+    pool.free([b], owner="c")
+    got = pool.alloc(pool.total, owner="d")   # recycling evicts the entry
+    assert got is not None
+    assert pool.lookup(pool.ROOT, (1, 2, 3, 4)) is None
+    assert pool.cached == 0
+    pool.check()
 
 
 def test_prefix_index_match_full_partial_and_cap():
@@ -298,6 +310,12 @@ def test_property_sharing_churn_invariants(ops):
     for sid, s in list(slots.items()):
         pool.free(s["blocks"], owner=sid)
     assert pool.available == pool.total
+    # entries survive frees as cached blocks; recycling the whole pool
+    # evicts every one of them
+    assert pool.stats()["indexed"] == pool.cached
+    pool.check()
+    full = pool.alloc(pool.total, owner="sweep")
+    assert full is not None
     assert pool.stats()["indexed"] == 0
 
 

@@ -1,0 +1,159 @@
+"""On-device sampler: greedy/temperature/top-k semantics, counter-based
+key determinism, logprobs, and the speculative acceptance rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import sampling
+from repro.serve.sampling import (GREEDY, SamplingParams, draft_propose,
+                                  sample, speculative_accept)
+
+
+def _logits(B, V, seed=0):
+    return jax.random.normal(jax.random.key(seed), (B, V)) * 3.0
+
+
+def _rows(n, temp=0.0, top_k=0, seed=0, ctr=0):
+    return (jnp.full((n,), temp, jnp.float32),
+            jnp.full((n,), top_k, jnp.int32),
+            jnp.full((n,), seed, jnp.int32),
+            jnp.full((n,), ctr, jnp.int32))
+
+
+def test_greedy_is_argmax_with_logprob():
+    lg = _logits(4, 33)
+    toks, lps = sample(lg, *_rows(4))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(lg, axis=-1)))
+    ref = jax.nn.log_softmax(lg, axis=-1)
+    expect = np.asarray(ref)[np.arange(4), np.asarray(toks)]
+    np.testing.assert_allclose(np.asarray(lps), expect, rtol=1e-6)
+
+
+def test_sampled_deterministic_per_seed_and_counter():
+    lg = _logits(2, 50)
+    a, _ = sample(lg, *_rows(2, temp=0.9, seed=7, ctr=3))
+    b, _ = sample(lg, *_rows(2, temp=0.9, seed=7, ctr=3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a different seed (or counter) is a different stream: over several
+    # draws at least one token must differ
+    diff = False
+    for ctr in range(6):
+        x, _ = sample(lg, *_rows(2, temp=0.9, seed=7, ctr=ctr))
+        y, _ = sample(lg, *_rows(2, temp=0.9, seed=8, ctr=ctr))
+        diff |= bool(np.any(np.asarray(x) != np.asarray(y)))
+    assert diff
+
+
+def test_top_k_restricts_support():
+    lg = _logits(1, 64, seed=3)
+    order = np.argsort(-np.asarray(lg)[0])
+    allowed = set(order[:5].tolist())
+    for ctr in range(20):
+        (tok,), _ = sample(lg, *_rows(1, temp=1.5, top_k=5, ctr=ctr))
+        assert int(tok) in allowed
+    # top_k=1 is greedy whatever the temperature
+    (tok,), _ = sample(lg, *_rows(1, temp=5.0, top_k=1, ctr=9))
+    assert int(tok) == int(order[0])
+
+
+def test_logprob_is_raw_model_logprob_even_when_shaped():
+    """Temperature/top-k shape the DRAW; the reported logprob stays the
+    raw log-softmax of the chosen token."""
+    lg = _logits(1, 40, seed=5)
+    (tok,), (lp,) = sample(lg, *_rows(1, temp=2.0, top_k=3, ctr=1))
+    ref = jax.nn.log_softmax(lg[0])[int(tok)]
+    assert float(lp) == pytest.approx(float(ref), rel=1e-6)
+
+
+def test_draft_propose_greedy_and_probs_shape():
+    lg = _logits(3, 20, seed=9)
+    toks, probs = draft_propose(lg, *_rows(3), jnp.zeros(3, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(lg, axis=-1)))
+    assert probs.shape == (3, 20)
+    np.testing.assert_allclose(np.asarray(jnp.sum(probs, -1)), 1.0,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------- speculative accept
+def _accept(tlogits, dprobs, proposed, n_spec, temp=0.0, seed=0, ctr=0):
+    B = tlogits.shape[0]
+    return speculative_accept(
+        tlogits, dprobs, jnp.asarray(proposed, jnp.int32),
+        jnp.asarray(n_spec, jnp.int32), *_rows(B, temp=temp, seed=seed,
+                                               ctr=ctr))
+
+
+def test_greedy_accept_counts_leading_argmax_matches():
+    V, k = 17, 3
+    tl = jax.random.normal(jax.random.key(2), (1, k + 1, V))
+    am = np.asarray(jnp.argmax(tl, axis=-1))[0]           # (k+1,)
+    dp = jnp.full((1, k, V), 1.0 / V)
+    # proposals: first matches, second diverges
+    proposed = [[int(am[0]), int((am[1] + 1) % V), int(am[2])]]
+    a, toks, lps = _accept(tl, dp, proposed, [k])
+    assert int(a[0]) == 1
+    # committed: the accepted proposal then the correction = argmax at 1
+    assert np.asarray(toks)[0, :2].tolist() == [int(am[0]), int(am[1])]
+    ref = jax.nn.log_softmax(tl[0, 1])[int(am[1])]
+    assert float(lps[0, 1]) == pytest.approx(float(ref), rel=1e-6)
+
+
+def test_greedy_accept_all_plus_bonus():
+    V, k = 11, 2
+    tl = jax.random.normal(jax.random.key(4), (1, k + 1, V))
+    am = np.asarray(jnp.argmax(tl, axis=-1))[0]
+    dp = jnp.full((1, k, V), 1.0 / V)
+    a, toks, _ = _accept(tl, dp, [[int(am[0]), int(am[1])]], [k])
+    assert int(a[0]) == k
+    assert np.asarray(toks)[0].tolist() == [int(x) for x in am]
+
+
+def test_rider_row_gets_exactly_the_bonus():
+    """n_spec = 0 (a non-speculating rider): zero proposals accepted,
+    the bonus is the position-0 sample — the plain decode step."""
+    V, k = 9, 3
+    tl = jax.random.normal(jax.random.key(6), (1, k + 1, V))
+    dp = jnp.full((1, k, V), 1.0 / V)
+    a, toks, _ = _accept(tl, dp, [[1, 2, 3]], [0])
+    assert int(a[0]) == 0
+    assert int(np.asarray(toks)[0, 0]) == int(jnp.argmax(tl[0, 0]))
+
+
+def test_sampled_accept_identical_dists_accepts_everything():
+    """p == q makes the acceptance ratio 1: every proposal commits, so a
+    perfect draft loses nothing even in sampled mode."""
+    V, k = 23, 3
+    tl = jax.random.normal(jax.random.key(8), (2, k + 1, V)) * 2.0
+    temp = 0.7
+    shaped = jax.vmap(jax.vmap(
+        lambda l: sampling._shaped_logits(l, jnp.float32(temp),
+                                          jnp.int32(0))))(tl)
+    probs = jax.nn.softmax(shaped, axis=-1)
+    # propose BY SAMPLING from q = p, any tokens: ratio p/q == 1 always
+    proposed = np.asarray(jnp.argmax(probs[:, :k], axis=-1))
+    a, toks, _ = _accept(tl, probs[:, :k], proposed, [k, k], temp=temp,
+                         seed=3, ctr=1)
+    assert np.asarray(a).tolist() == [k, k]
+
+
+def test_sampled_accept_zero_prob_proposal_rejected():
+    """A proposal the target gives ~zero probability is rejected and the
+    correction comes from the residual (never the rejected token)."""
+    V, k = 12, 2
+    base = np.full((1, k + 1, V), 0.0, np.float32)
+    base[:, :, 4] = 9.0                     # target mass concentrated on 4
+    tl = jnp.asarray(base)
+    dp = np.full((1, k, V), 1e-6, np.float32)
+    dp[:, :, 7] = 1.0                       # draft proposes 7 with mass ~1
+    a, toks, _ = _accept(tl, jnp.asarray(dp), [[7, 7]], [k], temp=1.0,
+                         seed=5, ctr=2)
+    assert int(a[0]) == 0
+    assert int(np.asarray(toks)[0, 0]) == 4
+
+
+def test_sampling_params_defaults():
+    assert GREEDY.greedy and GREEDY.temperature == 0.0
+    assert not SamplingParams(temperature=0.5).greedy

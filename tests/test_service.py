@@ -105,3 +105,37 @@ def test_lm_replica_load_reports_queue_and_slots(stack):
     rep.scheduler.submit(Request(rid=2, prompt=[4, 5]))
     rep.scheduler.submit(Request(rid=3, prompt=[4, 5]))
     assert rep.load() == 3                   # 1 active slot + 2 queued
+
+
+def test_bad_sampling_payload_is_a_request_error(stack):
+    """A malformed "sampling" dict is the client's fault: it must raise
+    RequestError (like oversized prompts), not escape as a replica
+    failure the balancer would retry everywhere and hold against
+    health."""
+    cfg, model, params = stack
+    svc = make_lm_service("lm_samp", model, params, n_replicas=1,
+                          batch_size=1, max_seq=32)
+    with pytest.raises(RequestError, match="bad sampling"):
+        svc.replicas[0].handler({"prompt": [5, 6, 7],
+                                 "sampling": {"temp": 0.9}})
+    out = svc.replicas[0].handler({"prompt": [5, 6, 7],
+                                   "max_new_tokens": 2,
+                                   "sampling": {"temperature": 0.5,
+                                                "seed": 3}})
+    assert len(out["tokens"]) == len(out["logprobs"]) == 2
+
+
+def test_non_dict_sampling_payload_is_a_request_error(stack):
+    cfg, model, params = stack
+    svc = make_lm_service("lm_samp2", model, params, n_replicas=1,
+                          batch_size=1, max_seq=32)
+    with pytest.raises(RequestError, match="sampling"):
+        svc.replicas[0].handler({"prompt": [5, 6], "sampling": "greedy"})
+
+
+def test_bad_speculation_payload_is_a_request_error(stack):
+    cfg, model, params = stack
+    svc = make_lm_service("lm_spec", model, params, n_replicas=1,
+                          batch_size=1, max_seq=32)
+    with pytest.raises(RequestError, match="speculation"):
+        svc.replicas[0].handler({"prompt": [5, 6], "speculation": "2"})
