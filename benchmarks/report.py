@@ -58,6 +58,16 @@ class Report:
         checks = "\n".join(f"{'PASS' if ok else 'FAIL'} {n}: {d}"
                            for n, ok, d in self.checks)
         (path / "checks.txt").write_text(checks + "\n")
+        # machine-readable snapshot for the CI bench-regression artifact
+        # (the perf trajectory lives in these JSONs, one per run)
+        import json
+        (path / "results.json").write_text(json.dumps({
+            "rows": [{"name": n, "value": v, "unit": u, "derived": d}
+                     for n, v, u, d in self.rows],
+            "checks": [{"name": n, "ok": ok, "detail": d}
+                       for n, ok, d in self.checks],
+            "n_failed": self.n_failed,
+        }, indent=2, default=str) + "\n")
 
     @property
     def n_failed(self) -> int:

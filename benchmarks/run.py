@@ -48,7 +48,9 @@ MODULES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--only", default="",
+                    help="substring filter; comma-separate to run "
+                         "several (e.g. --only paged_kv,serving)")
     ap.add_argument("--verbose", action="store_true")
     ap.add_argument("--save", default="experiments/bench",
                     help="directory for results.csv/tables.md ('' = off)")
@@ -57,8 +59,9 @@ def main() -> None:
     from benchmarks.report import Report
     report = Report(verbose=args.verbose)
     failed_modules = []
+    filters = [f for f in args.only.split(",") if f]
     for name in MODULES:
-        if args.only and args.only not in name:
+        if filters and not any(f in name for f in filters):
             continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()

@@ -34,6 +34,12 @@ def main() -> None:
     ap.add_argument("--policy", default="fifo", choices=POLICIES)
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="per-request deadline; 0 = no SLO")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill width (default: engine auto; "
+                         "0 = monolithic admission)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="per-tick prefill token budget (chunk "
+                         "continuation + new admissions)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
@@ -41,9 +47,12 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     eng = ServingEngine(model, params, batch_size=args.batch,
-                        max_seq=args.max_seq)
+                        max_seq=args.max_seq,
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_budget=args.prefill_budget)
 
-    sched = Scheduler(eng, policy=args.policy)
+    sched = Scheduler(eng, policy=args.policy,
+                      prefill_budget=args.prefill_budget)
 
     import time
     rng = jax.random.key(1)

@@ -181,12 +181,17 @@ def verify_decode_attention(q, k_cache, v_cache, base, *, sliding_window=0):
 def paged_verify_attention(q, pool_k, pool_v, k_new, v_new, block_table,
                            cache_len, n_write, *, sliding_window: int = 0,
                            use_kernel: bool = False):
-    """Multi-token verify against the KV block pool.
+    """Multi-token window against the KV block pool: the speculative
+    **verify** step and the **chunked-prefill** step share this path (a
+    prompt chunk is a window of known tokens scattered against the
+    partially-resident prompt; the causal-inside-the-window mask is
+    exactly the partial-prompt causal mask).
 
-    q/k_new/v_new: (B, S, H*, hd) — S = k+1 window tokens per row at
+    q/k_new/v_new: (B, S, H*, hd) — S window tokens per row at
     positions ``cache_len[b] + [0, S)``; n_write: (B,) tokens of the
-    window row b actually owns blocks for (``n_spec + 1``; 0 for parked
-    riders). Window token j of row b scatters at
+    window row b actually owns blocks for (``n_spec + 1`` when
+    verifying, the row's chunk token count when chunk-prefilling; 0 for
+    parked riders). Window token j of row b scatters at
     ``(block_table[b, (len+j) // bs], (len+j) % bs)`` when ``j <
     n_write[b]`` and is **diverted to the scratch block** otherwise —
     a row must never scatter speculative K/V into a block it has not
@@ -284,14 +289,16 @@ def attention_block(x, p, cfg, *, mode: str, cache=None, cache_len=None,
 
     cache: dict(k=(B,T,Hkv,hd), v=(B,T,Hkv,hd)) or None — or, with
     ``block_table`` set, the paged pool dict(k=(num_blocks,bs,Hkv,hd), ...).
-    In decode mode, ``x`` with more than one token per row is the
-    speculative **verify window**: the S tokens write K/V at positions
+    In decode mode, ``x`` with more than one token per row is a
+    **multi-token window** — a speculative verify window or a chunked
+    prefill window: the S tokens write K/V at positions
     ``cache_len[b] + [0, S)`` (paged writes diverted to scratch past
-    ``n_write[b]``) and attend causally inside the window.
+    ``n_write[b]``) and attend causally inside the window against the
+    already-resident cache.
     """
     win = cfg.sliding_window if sliding_window is None else sliding_window
     if mode == "decode" and x.shape[1] > 1:
-        # ---- multi-token verify window (speculative decode) ----
+        # ---- multi-token window (speculative verify / chunked prefill) ----
         B, S, _ = x.shape
         idx = jnp.asarray(cache_len, jnp.int32).reshape(-1)
         pos = idx[:, None] + jnp.arange(S)[None, :]          # (B,S)

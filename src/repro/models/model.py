@@ -189,11 +189,41 @@ class Model:
         return total, {"xent": loss, "aux": aux}
 
     # ---------------- prefill ----------------
-    def prefill(self, params, batch, plan=None, *, last_idx=None):
+    def prefill(self, params, batch, plan=None, *, last_idx=None,
+                cache=None, cache_len=None, block_table=None,
+                paged_kernel: bool = False, n_write=None):
         """last_idx: optional (B,) int32 — per-row index of the last *real*
         token when rows are right-padded to a shared bucket length (the
         serving engine's batched mixed-length admission). None keeps the
-        unpadded behaviour: logits at the final position."""
+        unpadded behaviour: logits at the final position.
+
+        **Chunked mode** (``cache`` is not None): ``batch["tokens"]``
+        (B, S) is a **chunk window** of each row's prompt at start
+        offset ``cache_len[b]`` — K/V written into the *resident* cache
+        at positions ``cache_len[b] + [0, S)``, each query attending
+        causally to everything already resident plus the window's own
+        prefix. This is the same multi-token decode path the speculative
+        :meth:`verify_step` uses (and inherits its proven differential
+        property: position j's logits equal what the j+1-th of S
+        sequential :meth:`decode_step` calls would produce), so a prompt
+        split into chunk windows reproduces a monolithic prefill
+        bit-for-bit. ``block_table``/``paged_kernel``/``n_write`` follow
+        :meth:`verify_step` (paged rows divert writes past their granted
+        count to the scratch block). Returns (logits (B, S, V), cache).
+        Recurrent families (rwkv / hybrid SSM) cannot chunk — their
+        state steps token-at-a-time — and raise, like verify. With
+        ``last_idx`` set in chunked mode, only each row's last-real-
+        position logits are computed (returned as (B, 1, V)) — a chunk
+        caller samples at most one token per row, so projecting the
+        whole window against the vocabulary would be pure waste."""
+        if cache is not None:
+            x, new_cache = self._window(params, batch["tokens"], cache,
+                                        cache_len, plan, block_table,
+                                        paged_kernel, n_write)
+            if last_idx is not None:
+                idx = jnp.asarray(last_idx, jnp.int32)
+                x = x[jnp.arange(x.shape[0]), idx][:, None, :]
+            return _logits(params, self.cfg, x), new_cache
         cfg = self.cfg
         x, extras, prefix = _build_inputs(params, cfg, batch,
                                           drop_last_token=False)
@@ -251,7 +281,10 @@ class Model:
     def verify_step(self, params, tokens, cache, cache_len, plan=None,
                     block_table=None, paged_kernel: bool = False,
                     n_write=None):
-        """Multi-token decode: the speculative **verify** path.
+        """Multi-token decode: the speculative **verify** path — and,
+        via :meth:`prefill`'s chunked mode, the **chunk-window** prompt
+        ingestion path (a chunk of prompt tokens is a verify window
+        whose tokens happen to be known-correct).
 
         tokens (B, S) int32 — row b's S = k+1 window tokens (the last
         committed token followed by the draft's proposals) at positions
@@ -272,10 +305,23 @@ class Model:
         caches verify: recurrent state (rwkv / hybrid SSM) advances
         token-at-a-time and has no multi-token catch-up here.
         """
+        x, new_cache = self._window(params, tokens, cache, cache_len,
+                                    plan, block_table, paged_kernel,
+                                    n_write)
+        logits = _logits(params, self.cfg, x)
+        return logits, new_cache
+
+    def _window(self, params, tokens, cache, cache_len, plan,
+                block_table, paged_kernel, n_write):
+        """Shared multi-token window body (verify / chunked prefill):
+        runs the decode-mode stack over S tokens per row at positions
+        ``cache_len[b] + [0, S)`` and returns the final-norm hidden
+        states (B, S, d) plus the updated cache — the caller decides
+        which positions to project against the vocabulary."""
         cfg = self.cfg
         kind = transformer.block_kind(cfg)
         if kind in ("rwkv", "hybrid"):
-            raise ValueError(f"verify_step unsupported for family "
+            raise ValueError(f"multi-token window unsupported for family "
                              f"{kind!r} (recurrent state is sequential)")
         B, S = tokens.shape
         x = _embed_tokens(params, cfg, tokens)
@@ -297,8 +343,7 @@ class Model:
         x, new_cache, _ = _run_stack(params, cfg, x, mode="decode",
                                      cache=cache, extras=extras, plan=plan)
         x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        logits = _logits(params, cfg, x)
-        return logits, new_cache
+        return x, new_cache
 
     # ---------------- cache ----------------
     def init_cache(self, batch_size: int, capacity: int):

@@ -74,6 +74,27 @@ admission compiles O(B x log max_seq) variants, not one per prompt
 length; pad positions are never attended (per-slot length masks them)
 and pad tail blocks are never allocated — a paged slot pays blocks for
 its *real* tokens only.
+
+**Chunked prefill** (``prefill_chunk``, default on for paddable
+families): a prompt longer than the chunk admits with its FIRST chunk
+only; the remainder becomes the slot's pending queue and feeds through
+**chunk windows** — multi-token steps (the verify machinery) that write
+each row's next ``<= chunk`` prompt tokens at its own positions while
+every decode slot rides the same batch with its single next token. A
+long prompt therefore admits as a sequence of budgeted chunk steps
+interleaved with decode instead of one monolithic stall — the
+head-of-line blocking fix the paper's sub-700ms responsiveness claim
+needs under sequential long-document arrival. The same queue drains a
+shared admission's un-shared suffix chunk-at-a-time, which removes the
+old bounded-suffix trade on prefix sharing (the suffix used to feed one
+token per step, so only short suffixes could share); chunk-written
+prompt blocks register in the prefix index exactly as prefilled ones
+do, so half-prefilled prompts share forward too. Chunked streams are
+bit-identical to monolithic prefill (``tests/test_chunked.py`` holds
+the whole engine grid to it). ``prefill_chunk=0`` restores monolithic
+admission; recurrent and MoE families always prefill monolithically
+(multi-token windows need the ``{k, v}`` scatter and bit-exact
+co-batching).
 """
 from __future__ import annotations
 
@@ -91,6 +112,11 @@ from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.spec import DraftRunner
 
 _MIN_BUCKET = 8
+# default chunk for chunked prefill (tokens per slot per chunk step):
+# small enough that a max_seq-sized prompt never stalls decode for more
+# than one chunk's compute, large enough that short prompts (the common
+# case) still admit in one piece exactly as before
+DEFAULT_PREFILL_CHUNK = 64
 
 
 @dataclass
@@ -104,6 +130,8 @@ class Request:
     sampling: SamplingParams = GREEDY   # greedy | temperature | top-k
     speculation: int | None = None  # draft tokens/step; None = engine
     #                                 default, 0 = opt out of speculation
+    prefill_chunk: int | None = None  # per-request chunk width override
+    #                                 (None = engine default)
     out_tokens: list = field(default_factory=list)
     out_logprobs: list = field(default_factory=list)  # raw log-softmax of
     #                                 each emitted token, 1:1 with out_tokens
@@ -133,7 +161,9 @@ class ServingEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  reserve_blocks: int = 1, prefix_sharing: bool = True,
                  use_kernel: bool = False, draft_model=None,
-                 draft_params=None, speculation: int = 0):
+                 draft_params=None, speculation: int = 0,
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int | None = None):
         self.model = model
         self.params = params
         self.B = batch_size
@@ -163,6 +193,29 @@ class ServingEngine:
         self.prefix_sharing = bool(prefix_sharing) and self.paged \
             and not is_moe
         self.use_kernel = bool(use_kernel)
+        # chunked prefill: prompts longer than the chunk admit with their
+        # first chunk and feed the rest through decode-interleaved chunk
+        # windows. Needs the multi-token {k, v} window (recurrent state
+        # steps token-at-a-time) and bit-exact co-batching (the MoE
+        # shared-capacity caveat), so only paddable families chunk;
+        # 0 = monolithic admission (the legacy comparison mode).
+        if prefill_chunk is not None and prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got "
+                             f"{prefill_chunk}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1, got "
+                             f"{prefill_budget}")
+        if self._paddable:
+            self.prefill_chunk = DEFAULT_PREFILL_CHUNK \
+                if prefill_chunk is None else int(prefill_chunk)
+        else:
+            if prefill_chunk:
+                raise ValueError("chunked prefill requires a paddable "
+                                 "pure-attention non-MoE cache")
+            self.prefill_chunk = 0
+        # per-step cap on pending prompt tokens fed across slots (the
+        # scheduler charges the same budget before admitting new work)
+        self.prefill_budget = prefill_budget
         # speculative draft-and-verify: a small draft model proposes k
         # tokens per slot, the target verifies them in one multi-token
         # step. Pure-attention targets only (the verify window needs the
@@ -190,6 +243,13 @@ class ServingEngine:
         # per decode step (writing K/V at the slot's own position) until
         # the last prompt token's logits produce the first output token
         self.slot_pending: list = [[] for _ in range(batch_size)]
+        # prefix-index registration frontier per slot, for chunk-written
+        # prompt blocks: slot_reg is the canonical parent block the next
+        # registration chains after (pool.ROOT for a fresh chain, False
+        # when the chain is broken and registration stops), slot_reg_pos
+        # the prompt position indexed so far
+        self.slot_reg: list = [False] * batch_size
+        self.slot_reg_pos = np.zeros(batch_size, np.int64)
         self._finished_at_admit: list = []
         self._used_slots: set = set()
         self._waiting: deque = deque()       # preempted, awaiting re-admission
@@ -307,6 +367,37 @@ class ServingEngine:
                                               ctrs)
             return (*acc, caches)
 
+        def chunk(p, toks, caches, lengths, last_idx, temps, top_ks,
+                  seeds, ctrs):
+            """Stripe chunk window: each row feeds its next pending
+            prompt tokens (decode riders their single next token, pads
+            past each row's count) through one multi-token window, and
+            samples at its own last real position (``last_idx`` — the
+            model projects only that position against the vocabulary);
+            the draw only counts for rows that finished their prompt
+            this window."""
+            logits, caches = model.prefill(p, {"tokens": toks}, plan,
+                                           cache=caches, cache_len=lengths,
+                                           last_idx=last_idx)
+            nxt, logp = sampling.sample(logits[:, 0, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, caches
+
+        def chunk_paged(p, toks, caches, lengths, table, n_write,
+                        last_idx, temps, top_ks, seeds, ctrs):
+            """Paged chunk window: scatter through the block table,
+            diverted to scratch past each row's fed count (pads, parked
+            riders)."""
+            logits, caches = model.prefill(p, {"tokens": toks}, plan,
+                                           cache=caches, cache_len=lengths,
+                                           block_table=table,
+                                           paged_kernel=kernel_flag,
+                                           n_write=n_write,
+                                           last_idx=last_idx)
+            nxt, logp = sampling.sample(logits[:, 0, :], temps, top_ks,
+                                        seeds, ctrs)
+            return nxt, logp, caches
+
         def copy_block(caches, src, dst):
             """Copy-on-write: duplicate physical block ``src`` into the
             freshly-allocated ``dst`` on device (all layers, one jitted
@@ -330,6 +421,8 @@ class ServingEngine:
                                donate_argnums=(2,))
         self._verify = jax.jit(verify_paged if self.paged else verify,
                                donate_argnums=(2,))
+        self._chunk_fn = jax.jit(chunk_paged if self.paged else chunk,
+                                 donate_argnums=(2,))
         self.metrics = {"prefills": 0, "prefill_batches": 0,
                         "decode_steps": 0, "completed": 0,
                         "stop_token_exits": 0, "slot_reuses": 0,
@@ -340,7 +433,9 @@ class ServingEngine:
                         "prefill_tokens_shared": 0,
                         "verify_steps": 0, "draft_steps": 0,
                         "spec_proposed": 0, "spec_accepted": 0,
-                        "spec_blocks_rolled_back": 0}
+                        "spec_blocks_rolled_back": 0,
+                        "chunked_admissions": 0, "chunk_steps": 0,
+                        "chunk_prefill_tokens": 0}
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -370,7 +465,7 @@ class ServingEngine:
         tokens already generated before a preemption evicted the slot."""
         return req.prompt + req.out_tokens
 
-    def _match_cost(self, eff: list):
+    def _match_cost(self, eff: list, chunk: int):
         """Resident-or-cached prefix match for ``eff`` and the admission
         cost with it: ``(blocks, matched, need)``. ``need`` counts the
         un-shared blocks, plus one per **cached** matched block (a freed
@@ -383,24 +478,83 @@ class ServingEngine:
         their first decode step. (A cached tail revives sole-owned:
         writable in place, no copy.)
 
-        A match is only *used* when the un-shared suffix is small —
-        ``P - m <= max(block_size, m)`` — because the suffix is fed one
-        token per decode step: sharing a 16-token preamble in front of a
-        240-token document would trade one batched prefill for 240
-        serial catch-up steps. Bounding the suffix by the matched length
-        keeps the catch-up cost no larger than the prefill compute the
-        match saves (chunked prefill of the suffix is the listed
-        follow-up that removes the trade entirely)."""
+        ``chunk`` is the request's chunk width. With chunked prefill
+        (the default) the un-shared suffix drains chunk-at-a-time, so
+        ANY match is worth using. Only in legacy monolithic mode
+        (``chunk == 0``), where the suffix feeds one token per decode
+        step, is a match restricted to bounded suffixes —
+        ``P - m <= max(block_size, m)`` — so a 16-token preamble in
+        front of a 240-token document doesn't trade one batched prefill
+        for 240 serial catch-up steps."""
         P = len(eff)
         full = self.pool.blocks_for(P)
         blocks, m = self.pool.match(eff, P - 1)
-        if m < self.block_size or P - m > max(self.block_size, m):
+        if m < self.block_size or \
+                (not chunk and P - m > max(self.block_size, m)):
             return [], 0, full
         need = full - len(blocks)
         need += sum(1 for b in blocks if self.pool.refcount(b) == 0)
         if m % self.block_size and self.pool.refcount(blocks[-1]) >= 1:
             need += 1                    # imminent CoW of the shared tail
         return blocks, m, need
+
+    def _chunk_for(self, req: Request) -> int:
+        """Chunk width for ``req`` (0 = monolithic admission + serial
+        catch-up): the request's override when set — an explicit 0 opts
+        the request out of chunking, matching the engine knob's meaning
+        — else the engine default; always 0 for families that cannot
+        run multi-token windows (recurrent / MoE). Negative overrides
+        are clamped here (add_requests rejects them loudly; this keeps
+        pre-admission probes like blocks_needed safe on them too)."""
+        if not self._paddable:
+            return 0
+        if req.prefill_chunk is None:
+            return self.prefill_chunk
+        return max(int(req.prefill_chunk), 0)
+
+    def pending_chunk_tokens(self) -> int:
+        """Pending prompt tokens the active slots will feed through
+        chunk windows on the next step — the continuation demand the
+        scheduler charges against its per-tick prefill budget before
+        admitting new prefills."""
+        tot = 0
+        for i, r in enumerate(self.slot_req):
+            if r is not None and self.slot_pending[i]:
+                tot += min(len(self.slot_pending[i]),
+                           max(self._chunk_for(r), 1))
+        if self.prefill_budget is not None:
+            tot = min(tot, self.prefill_budget)
+        return tot
+
+    def admission_costs(self, req: Request) -> tuple:
+        """``(blocks, prefill_tokens)`` admitting ``req`` right now
+        would cost — ONE prefix-match walk answers both (the scheduler
+        asks per queued candidate per tick, so the walk must not run
+        once per number). ``blocks`` is :meth:`blocks_needed`'s
+        post-sharing + speculative-watermark figure; ``prefill_tokens``
+        is what the admission call itself prefills — the first chunk
+        (or whole prompt when monolithic), and 0 for a shared
+        admission, whose un-shared suffix is chunk-step work charged as
+        continuation on later ticks."""
+        eff = self._eff_prompt(req)
+        P = len(eff)
+        C = self._chunk_for(req)
+        first = min(P, C) if C else P
+        if not self.paged:
+            return 0, first
+        spec = self.pool.blocks_for(min(P + self._spec_window(req),
+                                        self.max_seq)) \
+            - self.pool.blocks_for(P)
+        if self.prefix_sharing:
+            _, m, need = self._match_cost(eff, C)
+            return need + spec, (0 if m >= self.block_size else first)
+        return self.pool.blocks_for(P) + spec, first
+
+    def admit_prefill_tokens(self, req: Request) -> int:
+        """Prompt tokens admitting ``req`` right now would run through
+        prefill in the admission call itself (see
+        :meth:`admission_costs`)."""
+        return self.admission_costs(req)[1]
 
     def _spec_window(self, req: Request) -> int:
         """Write positions one speculative step may need past the
@@ -421,18 +575,13 @@ class ServingEngine:
         request's **speculative watermark** — the blocks its first
         draft-and-verify window will grow into — so a batch of
         admissions doesn't pass the gate and then mass-park on its
-        first speculative step. (0 when not paged — stripe admission is
-        gated on free slots alone.)"""
-        if not self.paged:
-            return 0
-        eff = self._eff_prompt(req)
-        P = len(eff)
-        spec = self.pool.blocks_for(min(P + self._spec_window(req),
-                                        self.max_seq)) \
-            - self.pool.blocks_for(P)
-        if self.prefix_sharing:
-            return self._match_cost(eff)[2] + spec
-        return self.pool.blocks_for(P) + spec
+        first speculative step. A CHUNKED admission still charges its
+        whole prompt here even though it only allocates its first
+        chunk's blocks up front: gating on the first chunk would admit
+        prompts the pool cannot finish and mass-park them mid-prompt.
+        (0 when not paged — stripe admission is gated on free slots
+        alone.)"""
+        return self.admission_costs(req)[0]
 
     def blocks_worst_case(self, req: Request) -> int:
         """Upper bound on the request's block demand, independent of what
@@ -451,16 +600,21 @@ class ServingEngine:
             return True
         return self.active == 0 and planned == 0 and need <= avail
 
-    def can_admit(self, req: Request, planned_blocks: int = 0) -> bool:
+    def can_admit(self, req: Request, planned_blocks: int = 0, *,
+                  need: int | None = None) -> bool:
         """Would admission succeed right now, with ``planned_blocks``
         already promised to earlier picks? Stripe engines admit whenever
         a slot is free; paged engines additionally demand blocks for the
         prompt (at the post-sharing cost) plus ``reserve_blocks`` of
         decode-growth headroom (waived when the engine is idle — an
-        empty pool has nothing to protect)."""
+        empty pool has nothing to protect). Pass ``need`` when the
+        caller already holds :meth:`blocks_needed`'s answer, to skip a
+        second prefix-match walk."""
         if not self.paged:
             return True
-        return self._admit_ok(self.blocks_needed(req), planned_blocks)
+        if need is None:
+            need = self.blocks_needed(req)
+        return self._admit_ok(need, planned_blocks)
 
     def memory_pressure(self) -> float:
         """Fraction of KV memory in use: pool occupancy when paged, slot
@@ -580,6 +734,9 @@ class ServingEngine:
             if len(r.prompt) > self.max_seq:
                 raise ValueError(f"request {r.rid}: prompt length "
                                  f"{len(r.prompt)} > max_seq {self.max_seq}")
+            if r.prefill_chunk is not None and r.prefill_chunk < 0:
+                raise ValueError(f"request {r.rid}: prefill_chunk "
+                                 f"{r.prefill_chunk} < 0")
             if self.paged and \
                     self.pool.blocks_for(len(r.prompt)) > self.pool.total:
                 raise ValueError(f"request {r.rid}: prompt needs "
@@ -609,14 +766,16 @@ class ServingEngine:
             if self.paged:
                 need = self.pool.blocks_for(P)
                 if self.prefix_sharing:
-                    blocks, m, cost = self._match_cost(eff)
+                    blocks, m, cost = self._match_cost(eff,
+                                                       self._chunk_for(r))
                     if m >= self.block_size:
                         acquired, matched, need = list(blocks), m, cost
                     else:
                         m_sim = self._sim_match(eff, P - 1, sim)
                         if m_sim >= self.block_size \
-                                and P - m_sim <= max(self.block_size,
-                                                     m_sim):
+                                and (self._chunk_for(r)
+                                     or P - m_sim <= max(self.block_size,
+                                                         m_sim)):
                             # an earlier member of this batch prefills the
                             # prefix: plan at the post-sharing cost and
                             # resolve the real blocks at insertion time
@@ -640,7 +799,20 @@ class ServingEngine:
                             planned -= 1
                         self.pool.acquire(b, owner=slot)
                 if acquired is None and self.prefix_sharing:
-                    self._sim_chains(eff, sim)
+                    # promise only what this admission actually REGISTERS
+                    # in this call: a chunked admission indexes its first
+                    # chunk's full blocks now and the rest over later
+                    # chunk steps — promising the whole prompt would let
+                    # a same-batch peer plan a cheap shared admission,
+                    # find the promise broken at insertion time, and
+                    # fall back to a plain prefill the block planner
+                    # never budgeted
+                    C = self._chunk_for(r)
+                    n0 = min(P, C) if C else P
+                    reg = eff if n0 >= P \
+                        else eff[:n0 - n0 % self.block_size]
+                    if reg:
+                        self._sim_chains(reg, sim)
             take.append((r, slot, acquired, matched))
         n_from_waiting = 0
         for r, _, _, _ in take:
@@ -649,54 +821,67 @@ class ServingEngine:
                 n_from_waiting += 1
         if not take:
             return 0
-        # ---- plain admissions first: batched prefill per shape group
+        # ---- plain admissions first: batched prefill per shape group.
+        # A chunked admission contributes only its FIRST chunk here (n0
+        # tokens); the remainder becomes the slot's pending queue, fed
+        # through decode-interleaved chunk windows by step().
         plain = [(r, s) for r, s, acq, _ in take if acq is None]
         groups: dict = {}
         for n, (req, slot) in enumerate(plain):
             P = len(self._eff_prompt(req))
+            C = self._chunk_for(req)
+            n0 = min(P, C) if C else P           # first-chunk token count
             if self._solo_prefill:
                 key = (n,)                       # one row per prefill call
             elif self._paddable:
-                key = _bucket(P, self.max_seq)
+                key = _bucket(n0, self.max_seq)
             else:
-                key = P                          # exact-length co-batching
-            groups.setdefault(key, []).append((req, slot))
+                key = n0                         # exact-length co-batching
+            groups.setdefault(key, []).append((req, slot, n0))
         for key, members in groups.items():
-            width = key if isinstance(key, int) \
-                else len(self._eff_prompt(members[0][0]))
+            width = key if isinstance(key, int) else members[0][2]
             toks = np.zeros((len(members), width), np.int32)
             last = np.zeros(len(members), np.int32)
             slots = np.zeros(len(members), np.int32)
-            for j, (req, slot) in enumerate(members):
-                eff = self._eff_prompt(req)
-                toks[j, :len(eff)] = eff
-                last[j] = len(eff) - 1
+            for j, (req, slot, n0) in enumerate(members):
+                toks[j, :n0] = self._eff_prompt(req)[:n0]
+                last[j] = n0 - 1
                 slots[j] = slot
-            samp = self._sampling_rows([req for req, _ in members])
+            samp = self._sampling_rows([req for req, _, _ in members])
             if self.paged:
                 nxt, logp, pref = self._prefill_paged(
                     self.params, jnp.asarray(toks), jnp.asarray(last),
                     *samp)
-                for j, (req, slot) in enumerate(members):
-                    self._insert_paged(pref, j, slot, self._eff_prompt(req))
+                for j, (req, slot, n0) in enumerate(members):
+                    eff = self._eff_prompt(req)
+                    self._insert_paged(pref, j, slot, eff[:n0],
+                                       more=n0 < len(eff))
             else:
                 nxt, logp, self.caches = self._admit(
                     self.params, self.caches, jnp.asarray(toks),
                     jnp.asarray(last), jnp.asarray(slots), *samp)
             nxt, logp = np.asarray(nxt), np.asarray(logp)
-            for j, (req, slot) in enumerate(members):
-                P = len(self._eff_prompt(req))
-                req.out_tokens.append(int(nxt[j]))
-                req.out_logprobs.append(float(logp[j]))
+            for j, (req, slot, n0) in enumerate(members):
+                eff = self._eff_prompt(req)
+                P = len(eff)
                 if slot in self._used_slots:
                     self.metrics["slot_reuses"] += 1
                 self._used_slots.add(slot)
                 self.slot_req[slot] = req
-                self.slot_len[slot] = P
+                self.slot_len[slot] = n0
+                self.slot_pending[slot] = list(eff[n0:])
                 self._admit_seq += 1
                 self._admit_order[slot] = self._admit_seq
                 self.metrics["prefills"] += 1
                 self.metrics["prefill_tokens_computed"] += P
+                if n0 < P:
+                    # mid-prompt: the sampled draw is mid-prompt logits,
+                    # discarded — the first real token comes from the
+                    # chunk window that drains the pending queue
+                    self.metrics["chunked_admissions"] += 1
+                    continue
+                req.out_tokens.append(int(nxt[j]))
+                req.out_logprobs.append(float(logp[j]))
                 if self._is_done(req):
                     self._retire(slot)
                     self._finished_at_admit.append(req)
@@ -768,30 +953,36 @@ class ServingEngine:
         the ordinary decode steps."""
         eff = self._eff_prompt(req)
         P = len(eff)
+        C = self._chunk_for(req)
         if acquired:
             blocks = list(acquired)
             m = self._extend_match(eff, slot, blocks, matched)
         else:
-            blocks, m, _ = self._match_cost(eff)   # m = 0 if unusable now
+            blocks, m, _ = self._match_cost(eff, C)  # m = 0 if unusable now
             for b in blocks:
                 self.pool.acquire(b, owner=slot)
         if m < self.block_size:
             # in-batch promise broken: the source retired inside this
             # very batch and took its index entries with it (nothing was
             # acquired, and the source's freed blocks more than cover a
-            # solo plain prefill)
-            toks = np.asarray([eff], np.int32)
-            last = np.asarray([P - 1], np.int32)
+            # solo plain prefill) — chunked like any plain admission
+            n0 = min(P, C) if C else P
+            toks = np.asarray([eff[:n0]], np.int32)
+            last = np.asarray([n0 - 1], np.int32)
             nxt, logp, pref = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(last),
                 *self._sampling_rows([req]))
-            self._insert_paged(pref, 0, slot, eff)
-            req.out_tokens.append(int(np.asarray(nxt)[0]))
-            req.out_logprobs.append(float(np.asarray(logp)[0]))
+            self._insert_paged(pref, 0, slot, eff[:n0], more=n0 < P)
             self.slot_req[slot] = req
-            self.slot_len[slot] = P
+            self.slot_len[slot] = n0
+            self.slot_pending[slot] = list(eff[n0:])
             self.metrics["prefill_batches"] += 1
             self.metrics["prefill_tokens_computed"] += P
+            if n0 < P:
+                self.metrics["chunked_admissions"] += 1
+            else:
+                req.out_tokens.append(int(np.asarray(nxt)[0]))
+                req.out_logprobs.append(float(np.asarray(logp)[0]))
         else:
             self.slot_blocks[slot] = list(blocks)
             self.block_table[slot, :] = 0
@@ -799,6 +990,15 @@ class ServingEngine:
             self.slot_req[slot] = req
             self.slot_len[slot] = m
             self.slot_pending[slot] = list(eff[m:])
+            # chunk-step registration continues the matched chain only
+            # from a block boundary: a partial-tail match ends inside a
+            # block another sequence registered, and children of a
+            # partial parent are unreachable by the match walk
+            if m % self.block_size == 0:
+                self.slot_reg[slot] = blocks[-1]
+                self.slot_reg_pos[slot] = m
+            else:
+                self.slot_reg[slot] = False
             self.metrics["shared_admissions"] += 1
             self.metrics["prefill_tokens_shared"] += m
             self.metrics["prefill_tokens_computed"] += P - m
@@ -812,11 +1012,17 @@ class ServingEngine:
             self._retire(slot)
             self._finished_at_admit.append(req)
 
-    def _insert_paged(self, pref, row: int, slot: int, eff: list) -> None:
+    def _insert_paged(self, pref, row: int, slot: int, eff: list, *,
+                      more: bool = False) -> None:
         """Allocate the slot's blocks and scatter its prefill KV into the
         pool block-by-block (jitted dynamic_update_slice, pool donated);
         with sharing on, advertise each block's prompt content in the
-        prefix index so later admissions can reuse it."""
+        prefix index so later admissions can reuse it. ``more``: the
+        prompt continues past ``eff`` (a chunked admission's first
+        chunk) — the trailing partial block keeps filling with prompt
+        content over the coming chunk steps, so its registration is
+        deferred to ``_register_chunk_progress`` (registering a
+        half-chunk extent now would freeze the index at it)."""
         n_tokens = len(eff)
         n_blk = self.pool.blocks_for(n_tokens)
         blocks = self.pool.alloc(n_blk, owner=slot)
@@ -825,20 +1031,67 @@ class ServingEngine:
         self.block_table[slot, :] = 0
         self.block_table[slot, :n_blk] = blocks
         bs = self.block_size
-        parent = self.pool.ROOT
+        parent = self.pool.ROOT if self.prefix_sharing else False
+        reg_pos = 0
         for i, phys in enumerate(blocks):
             self.caches = self._write_block(
                 self.caches, pref, np.int32(row),
                 np.int32(i * bs), np.int32(phys))
-            if parent is not False and self.prefix_sharing:
+            end = min((i + 1) * bs, n_tokens)
+            if parent is not False and (end - i * bs == bs or not more):
                 # thread the canonical block as the next link's parent so
                 # duplicate chains converge on one indexed copy; an
                 # unregistrable link ends the chain (False sentinel)
-                parent = self.pool.register(
-                    phys, parent,
-                    tuple(eff[i * bs:min((i + 1) * bs, n_tokens)]))
+                parent = self.pool.register(phys, parent,
+                                            tuple(eff[i * bs:end]))
                 if parent is None:
                     parent = False
+                else:
+                    reg_pos = end
+        if parent is not False and n_tokens % bs and not more:
+            # the final registration was a partial tail: children of a
+            # partial parent are unreachable by the match walk, so the
+            # chain ends here. A chunked admission (``more``) instead
+            # SKIPPED the partial registration above — its chain stays
+            # open at the last full block (or ROOT for a sub-block first
+            # chunk) and _register_chunk_progress registers the rest as
+            # the chunk steps fill it.
+            parent = False
+        self.slot_reg[slot] = parent
+        self.slot_reg_pos[slot] = reg_pos
+
+    def _register_chunk_progress(self, i: int, final: bool) -> None:
+        """Advertise prompt content a chunk / catch-up step just wrote
+        into slot ``i``'s blocks: every newly FULL block registers in
+        the prefix index chained after the slot's canonical frontier,
+        and — once the prompt drains (``final``) — the trailing partial
+        block registers at the prompt's true tail. These are exactly the
+        entries a monolithic prefill would have left, so half-prefilled
+        prompts share forward like whole ones. No-op when the chain is
+        broken (partial-tail match, CoW below the frontier, duplicate
+        registration) — sharing still covers everything before the
+        break."""
+        parent = self.slot_reg[i]
+        if parent is False or not self.prefix_sharing:
+            return
+        bs = self.block_size
+        end = int(self.slot_len[i])    # prompt content resident through
+        pos = int(self.slot_reg_pos[i])
+        eff = self._eff_prompt(self.slot_req[i])
+        while parent is not False and pos + bs <= end:
+            parent = self.pool.register(self.slot_blocks[i][pos // bs],
+                                        parent, tuple(eff[pos:pos + bs]))
+            if parent is None:
+                parent = False
+            else:
+                pos += bs
+        if parent is not False and final and pos < end:
+            self.pool.register(self.slot_blocks[i][pos // bs], parent,
+                               tuple(eff[pos:end]))
+            parent = False     # a partial tail ends the walkable chain
+            pos = end
+        self.slot_reg[i] = parent
+        self.slot_reg_pos[i] = pos
 
     # ------------------------------------------------------------- decode
     def _is_done(self, req: Request) -> bool:
@@ -857,6 +1110,8 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
+        self.slot_reg[slot] = False
+        self.slot_reg_pos[slot] = 0
         self._release_blocks(slot)
         if self.draft is not None:
             self.draft.reset(slot)
@@ -876,6 +1131,8 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
+        self.slot_reg[slot] = False
+        self.slot_reg_pos[slot] = 0
         self._release_blocks(slot)
         if self.draft is not None:
             self.draft.reset(slot)
@@ -1045,6 +1302,8 @@ class ServingEngine:
                 # suffix is exhausted
                 self.slot_len[i] += 1
                 self.slot_pending[i].pop(0)
+                self._register_chunk_progress(
+                    i, final=not self.slot_pending[i])
                 if self.paged:
                     self._rollback(i)
                 if self.slot_pending[i]:
@@ -1077,11 +1336,75 @@ class ServingEngine:
                 self._retire(i)
         return finished
 
+    def _chunk_step(self, active: list, chunk_want: dict,
+                    finished: list) -> list:
+        """One **chunk window** step: every slot with pending prompt
+        tokens feeds up to its chunk of them (K/V written at its own
+        positions, attending causally against its resident prefix) while
+        decode slots ride the same batch with their single next token —
+        prompt ingestion interleaved with decode instead of stalling it.
+        A row that exhausts its prompt inside the window samples its
+        first output token at its last real position; every other
+        window draw is discarded. Parked slots ride with ``n_write`` 0
+        (paged: all their writes divert to scratch)."""
+        W = _bucket(max(chunk_want.get(i, 1) for i in active),
+                    self.max_seq)
+        toks = np.zeros((self.B, W), np.int32)
+        n_write = np.zeros(self.B, np.int32)
+        last = np.zeros(self.B, np.int32)
+        n_fed: dict = {}
+        for i in active:
+            r = self.slot_req[i]
+            if self.slot_pending[i]:
+                c = chunk_want.get(i, 1)
+                toks[i, :c] = self.slot_pending[i][:c]
+            else:
+                c = 1
+                toks[i, 0] = r.out_tokens[-1]
+            n_fed[i] = c
+            n_write[i] = c
+            last[i] = c - 1
+        temps, top_ks, seeds, ctrs = self._sampling_slots()
+        if self.paged:
+            nxt, logp, self.caches = self._chunk_fn(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.slot_len), jnp.asarray(self.block_table),
+                jnp.asarray(n_write), jnp.asarray(last), temps, top_ks,
+                seeds, ctrs)
+        else:
+            nxt, logp, self.caches = self._chunk_fn(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.slot_len), jnp.asarray(last), temps,
+                top_ks, seeds, ctrs)
+        self.metrics["decode_steps"] += 1
+        self.metrics["chunk_steps"] += 1
+        nxt, logp = np.asarray(nxt), np.asarray(logp)
+        for i in active:
+            r = self.slot_req[i]
+            c = n_fed[i]
+            self.slot_len[i] += c
+            if self.slot_pending[i]:
+                del self.slot_pending[i][:c]
+                self.metrics["chunk_prefill_tokens"] += c
+                if self.paged:
+                    self._register_chunk_progress(
+                        i, final=not self.slot_pending[i])
+                if self.slot_pending[i]:
+                    continue
+            r.out_tokens.append(int(nxt[i]))
+            r.out_logprobs.append(float(logp[i]))
+            if self._is_done(r):
+                finished.append(r)
+                self._retire(i)
+        return finished
+
     def step(self) -> list:
         """One decode step over all active slots (each at its own length)
         — a draft-and-verify multi-token step when the engine speculates
-        and any slot has room to. Parked slots ride the batch but emit
-        nothing. Returns finished requests."""
+        and any slot has room to, a chunk-window step when any slot owes
+        more than one pending prompt token (prompt ingestion interleaved
+        with everyone else's decode). Parked slots ride the batch but
+        emit nothing. Returns finished requests."""
         finished, self._finished_at_admit = self._finished_at_admit, []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -1092,10 +1415,28 @@ class ServingEngine:
                 finished.append(self.slot_req[i])
                 self._retire(i)
                 active.remove(i)
+        # chunk plan: pending prompt tokens each slot feeds this step,
+        # budgeted per tick across slots in admission order (every slot
+        # still makes >= 1 token of progress on a dry budget)
+        chunk_want: dict = {}
+        budget = self.prefill_budget
+        for i in sorted(active, key=lambda j: self._admit_order[j]):
+            if not self.slot_pending[i]:
+                continue
+            c = min(len(self.slot_pending[i]),
+                    max(self._chunk_for(self.slot_req[i]), 1))
+            if budget is not None:
+                c = max(1, min(c, budget))
+                budget -= c
+            chunk_want[i] = c
+        chunking = any(c > 1 for c in chunk_want.values())
         # plan speculative windows before securing write sites, so the
-        # watermark (window) blocks are granted in the same pass
+        # watermark (window) blocks are granted in the same pass. A
+        # chunk tick skips speculation: the window belongs to the
+        # chunks, pending rows ride plain in a verify batch anyway, and
+        # speculation resumes the moment the prompts drain.
         n_spec = np.zeros(self.B, np.int32)
-        if self.spec_k:
+        if self.spec_k and not chunking:
             for i in active:
                 r = self.slot_req[i]
                 if self.slot_pending[i]:
@@ -1107,19 +1448,29 @@ class ServingEngine:
                     k, self.max_seq - 1 - int(self.slot_len[i]),
                     r.max_new_tokens - len(r.out_tokens) - 1))
         if self.paged and active:
-            want = {i: int(n_spec[i]) + 1 for i in active} \
-                if n_spec.any() else None
+            if chunking:
+                want = {i: chunk_want.get(i, 1) for i in active}
+            elif n_spec.any():
+                want = {i: int(n_spec[i]) + 1 for i in active}
+            else:
+                want = None
             secured = self._grow_or_park(active, want)
             for i in active:
                 # pool pressure degrades the window (possibly to 0: the
-                # slot rides this step non-speculatively)
+                # slot rides this step non-speculatively); a degraded
+                # chunk just feeds fewer tokens this step
                 n_spec[i] = min(n_spec[i], secured[i] - 1)
+                if i in chunk_want:
+                    chunk_want[i] = min(chunk_want[i], secured[i])
+            chunking = any(chunk_want.get(i, 0) > 1 for i in active)
             finished.extend(self._finished_at_admit)
             self._finished_at_admit = []
         if not active:
             return finished
         if self.spec_k and any(n_spec[i] > 0 for i in active):
             return self._spec_step(active, n_spec, finished)
+        if chunking:
+            return self._chunk_step(active, chunk_want, finished)
         tok = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):
             if r is None:
@@ -1149,6 +1500,9 @@ class ServingEngine:
                 # logits only matter once the suffix is exhausted — then
                 # the sample is the first genuinely generated token
                 self.slot_pending[i].pop(0)
+                if self.paged:
+                    self._register_chunk_progress(
+                        i, final=not self.slot_pending[i])
                 if self.slot_pending[i]:
                     continue
             r.out_tokens.append(int(nxt[i]))

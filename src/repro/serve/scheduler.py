@@ -44,6 +44,15 @@ never-servable check at submit keeps the worst-case bound
 (``blocks_worst_case``): a prefix match may be gone by the time a
 preempted request re-admits — and a window the pool cannot grant only
 degrades speculation, never serviceability.
+
+With ``prefill_budget`` set, every tick also charges a **prefill token
+budget**: the chunk tokens active slots will feed this step (chunked
+prompt ingestion mid-flight) are charged first, and new admissions only
+join with the remainder — so a burst of long-prompt arrivals is paced
+across ticks instead of stacking admission prefills onto one decode
+step. The same value caps the engine's per-step chunk tokens across
+slots; an idle engine admits regardless (there is no decode latency to
+protect, and an over-budget prompt must not livelock).
 """
 from __future__ import annotations
 
@@ -86,12 +95,19 @@ class Scheduler:
     """Admission + slot-filling policy over a ServingEngine."""
 
     def __init__(self, engine: ServingEngine, *, policy: str = "fifo",
-                 max_queue: int = 0, pressure_shed: float | None = None):
+                 max_queue: int = 0, pressure_shed: float | None = None,
+                 prefill_budget: int | None = None):
         assert policy in POLICIES, policy
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1, got "
+                             f"{prefill_budget}")
         self.engine = engine
         self.policy = policy
         self.max_queue = max_queue            # 0 = unbounded
         self.pressure_shed = pressure_shed    # occupancy threshold, None=off
+        # per-tick cap on prefill tokens (chunk continuation + new
+        # admissions); None = unbudgeted
+        self.prefill_budget = prefill_budget
         self.queue: deque = deque()
         self.stats = SchedulerStats()
         self._enq_t: dict[int, float] = {}
@@ -179,12 +195,21 @@ class Scheduler:
 
     # ------------------------------------------------------------ serving
     def tick(self) -> list:
-        """Fill free slots (one batched prefill, bounded by pool blocks),
-        run one decode step. Returns finished requests."""
+        """Fill free slots (one batched prefill, bounded by pool blocks
+        and the per-tick prefill token budget), run one decode step.
+        Returns finished requests."""
         if self.pressure_shed is not None and self.queue \
                 and self.engine.memory_pressure() >= self.pressure_shed:
             self._shed_for_memory_pressure()
         batch, planned_blocks = [], 0
+        budget = None
+        if self.prefill_budget is not None:
+            # chunk continuation is charged FIRST: slots mid-prompt keep
+            # their per-tick token share; new prefills only join with
+            # what's left, so a burst of long arrivals cannot starve the
+            # decode tick with admission prefill work
+            budget = self.prefill_budget \
+                - self.engine.pending_chunk_tokens()
         while self.queue and len(batch) < len(self.engine.free_slots()):
             i = self._next_index()
             req = self.queue[i]
@@ -193,10 +218,19 @@ class Scheduler:
                 del self.queue[i]
                 self._shed(req)
                 continue
-            if not self.engine.can_admit(req, planned_blocks):
+            # one prefix-match walk per candidate answers both gates
+            need, cost = self.engine.admission_costs(req)
+            if not self.engine.can_admit(req, planned_blocks, need=need):
                 break               # pool full: head waits for block frees
+            if budget is not None:
+                if cost > budget and (batch or self.engine.active):
+                    break           # head waits for a tick with room —
+                    #                 unless the engine is idle (nothing
+                    #                 to protect, and waiting would
+                    #                 livelock an over-budget prompt)
+                budget -= cost
             del self.queue[i]
-            planned_blocks += self.engine.blocks_needed(req)
+            planned_blocks += need
             batch.append(req)
         if batch or self.engine.waiting:
             # even with an empty batch the engine must get a chance to

@@ -67,13 +67,25 @@ class LMReplica:
                 # replica failure to the balancer
                 raise RequestError(f"{self.name}: \"speculation\" must be "
                                    f"a non-negative int, got {spec!r}")
+            chunk = payload.get("prefill_chunk")
+            if chunk is not None and (isinstance(chunk, bool)
+                                      or not isinstance(chunk, int)
+                                      or chunk < 1):
+                # the payload contract is positive-int-or-absent (absent
+                # = engine default); non-positive values are a client
+                # error, not a replica failure. (Engine-internal
+                # Request.prefill_chunk=0 is a valid monolithic opt-out;
+                # the HTTP-ish payload deliberately doesn't expose it.)
+                raise RequestError(f"{self.name}: \"prefill_chunk\" must "
+                                   f"be a positive int, got {chunk!r}")
             req = Request(rid=self._rid, prompt=list(payload["prompt"]),
                           max_new_tokens=payload.get("max_new_tokens", 8),
                           stop_tokens=tuple(payload.get("stop_tokens", ())),
                           priority=payload.get("priority", 0),
                           deadline_s=payload.get("deadline_s"),
                           sampling=samp,
-                          speculation=payload.get("speculation"))
+                          speculation=payload.get("speculation"),
+                          prefill_chunk=chunk)
             # client errors: no other replica can serve these either, so
             # they must NOT look like replica failures to the balancer
             eng = self.scheduler.engine
@@ -113,7 +125,9 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                     pressure_shed: float | None = None,
                     prefix_sharing: bool = True,
                     use_kernel: bool = False, draft_model=None,
-                    draft_params=None, speculation: int = 0) -> Service:
+                    draft_params=None, speculation: int = 0,
+                    prefill_chunk: int | None = None,
+                    prefill_budget: int | None = None) -> Service:
     """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
     optionally registered with a Supervisor (started in priority order).
 
@@ -129,7 +143,14 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
     small model and verifies its k proposals per slot in one multi-token
     target step (requests opt out — or down — with a ``"speculation"``
     payload key; ``"sampling"`` carries per-request
-    temperature/top_k/seed, and the reply streams per-token logprobs)."""
+    temperature/top_k/seed, and the reply streams per-token logprobs).
+    ``prefill_chunk`` sets each engine's chunked-prefill width (None =
+    the engine default for chunkable families; 0 = monolithic
+    admission; requests override per-call with a ``"prefill_chunk"``
+    payload key) and ``prefill_budget`` arms the per-tick prefill token
+    budget on both the engine's chunk steps and the scheduler's
+    admission fill — non-positive values raise a client
+    :class:`RequestError` at the payload, ``ValueError`` here."""
     replicas = []
     for i in range(n_replicas):
         eng = ServingEngine(model, params, batch_size=batch_size,
@@ -138,9 +159,12 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                             prefix_sharing=prefix_sharing,
                             use_kernel=use_kernel, draft_model=draft_model,
                             draft_params=draft_params,
-                            speculation=speculation)
+                            speculation=speculation,
+                            prefill_chunk=prefill_chunk,
+                            prefill_budget=prefill_budget)
         sched = Scheduler(eng, policy=policy, max_queue=max_queue,
-                          pressure_shed=pressure_shed)
+                          pressure_shed=pressure_shed,
+                          prefill_budget=prefill_budget)
         lm = LMReplica(f"{name}/{i}", sched)
         replicas.append(Replica(f"{name}/{i}", lm,
                                 backup=(with_backup and i == n_replicas - 1

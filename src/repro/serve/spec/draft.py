@@ -9,15 +9,19 @@ the same invariant the target engine already proves for mixed-length
 decode). The target's paged pool needs real block rollback; the draft
 does not.
 
-Per speculative round the runner feeds, batched across slots, each
+Per speculative round the runner ingests, batched across slots, each
 proposing row's **catch-up tokens** (committed tokens the draft has not
-cached yet — the previous round's bonus/correction token, plus the last
-proposal when everything was accepted; at most 2) followed by ``k``
-**proposal** draws. Rows not proposing this round ride the batch with
-their writes landing harmlessly past their own valid stripe extent.
-Proposals are drawn with the *request's* sampling params (greedy rows
-propose the draft argmax) from a dedicated key stream, and every
-proposal's shaped distribution is returned for acceptance sampling.
+cached yet — usually the previous round's bonus/correction token plus
+the last proposal when everything was accepted, but arbitrarily many
+after the target ran chunk-prefill ticks without the draft) in ONE
+chunked-prefill window call (``model.prefill`` chunk mode — the serial
+token-per-step catch-up loop it replaced cost ``max(catch) - 1`` draft
+steps), then runs exactly ``k`` **proposal** draws. Rows not proposing
+this round ride the batch with their writes landing harmlessly past
+their own valid stripe extent. Proposals are drawn with the *request's*
+sampling params (greedy rows propose the draft argmax) from a dedicated
+key stream, and every proposal's shaped distribution is returned for
+acceptance sampling.
 
 The engine owns commit/rollback: after acceptance it calls
 :meth:`commit` with the new valid draft length (cached committed
@@ -82,8 +86,21 @@ class DraftRunner:
                                                 top_ks, seeds, ctrs, pos)
             return nxt, probs, caches
 
+        def ingest(p, toks, caches, lengths):
+            """Chunked catch-up: write each row's uncached committed
+            tokens into its stripe in one multi-token window (positions
+            ``lengths[b] + [0, S)``; pad rows' junk lands past their
+            valid extent). Logits discarded — the draft only needs the
+            cache, so only position 0 is projected (last_idx=0)."""
+            _, caches = model.prefill(p, {"tokens": toks}, plan,
+                                      cache=caches, cache_len=lengths,
+                                      last_idx=jnp.zeros(toks.shape[0],
+                                                         jnp.int32))
+            return caches
+
         self._admit = jax.jit(admit, donate_argnums=(1,))
         self._step = jax.jit(step, donate_argnums=(2,))
+        self._ingest = jax.jit(ingest, donate_argnums=(2,))
 
     # --------------------------------------------------------- admission
     def admit(self, members: list) -> None:
@@ -127,44 +144,50 @@ class DraftRunner:
         Returns (proposed (B, k) int32 host array, draft_probs
         (B, k, V) device array — the shaped distribution each proposal
         was drawn from).
+
+        All catch-up except each row's last token lands in ONE chunked
+        ingest call, so a round costs ``1 + k`` draft steps however far
+        the draft fell behind (the serial loop cost
+        ``max(catch) - 1 + k``); the last catch-up token then draws the
+        first proposal, aligning every row at the same loop offset.
         """
         B, L = self.B, self.len
         catch = np.ones(B, np.int64)
         for i in rows:
             catch[i] = len(tails[i])
             assert catch[i] >= 1, (i, int(L[i]))
-        steps = int(max(catch[i] for i in rows)) - 1 + k
+        pre = int(max(catch[i] for i in rows)) - 1
+        if pre > 0:
+            from repro.serve.engine import _bucket   # lazy: engine imports us
+            W = _bucket(pre, self.max_seq)
+            toks = np.zeros((B, W), np.int32)
+            for i in rows:
+                toks[i, :catch[i] - 1] = tails[i][:-1]
+            self.caches = self._ingest(self.params, jnp.asarray(toks),
+                                       self.caches,
+                                       jnp.asarray(L.astype(np.int32)))
+            for i in rows:
+                L[i] += catch[i] - 1        # caches valid through the ingest
+            self.steps_run += 1
         proposed = np.zeros((B, k), np.int32)
         probs_steps = []
         tok = np.zeros((B, 1), np.int32)
         last = np.zeros(B, np.int32)
-        for t in range(steps):
-            pos = np.zeros(B, np.int32)
+        for t in range(k):
             for i in rows:
-                c = int(catch[i])
-                if t <= c - 1:
-                    tok[i, 0] = tails[i][t]    # catch-up; last one draws
-                else:                          # the first proposal
-                    tok[i, 0] = last[i]        # previous proposal
-                pos[i] = max(t - (c - 1), 0)
+                # the last catch-up token draws the first proposal
+                tok[i, 0] = tails[i][-1] if t == 0 else last[i]
             nxt, probs, self.caches = self._step(
                 self.params, jnp.asarray(tok), self.caches,
                 jnp.asarray((L + t).astype(np.int32)), temps, top_ks,
-                seeds, ctrs, jnp.asarray(pos))
+                seeds, ctrs, jnp.asarray(np.full(B, t, np.int32)))
             probs_steps.append(probs)
             nxt = np.asarray(nxt)
             for i in rows:
-                j = t - (int(catch[i]) - 1)
-                if 0 <= j < k:
-                    proposed[i, j] = nxt[i]
+                proposed[i, t] = nxt[i]
                 last[i] = nxt[i]
-        self.steps_run += steps
-        # per-row gather: row i's proposal j came from step catch_i-1+j
-        all_probs = jnp.stack(probs_steps, axis=1)          # (B, steps, V)
-        idx = np.clip(catch[:, None] - 1 + np.arange(k)[None, :], 0,
-                      steps - 1)
-        draft_probs = jnp.take_along_axis(
-            all_probs, jnp.asarray(idx, jnp.int32)[:, :, None], axis=1)
+        self.steps_run += k
+        draft_probs = jnp.stack(probs_steps, axis=1)        # (B, k, V)
         return proposed, draft_probs
 
     # ------------------------------------------------------- bookkeeping

@@ -1,0 +1,518 @@
+"""Chunked prefill: decode-interleaved prompt ingestion.
+
+The tentpole property: a prompt split into chunk windows emits token
+streams **bit-identical** to monolithic prefill across the whole engine
+grid {paged, kernel, shared-prefix, stripe, speculative} — including
+chunk sizes that don't divide the prompt, chunk boundaries landing
+mid-block, park/preempt between chunks, and chunked admissions churning
+against decode. Plus the knobs: the scheduler's per-tick prefill token
+budget and the service-level chunk-size payload key.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic local shim, see requirements-dev
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, lens, max_new=5, seed=1, **kw):
+    rng = jax.random.key(seed)
+    out = []
+    for i, L in enumerate(lens):
+        rng, k = jax.random.split(rng)
+        out.append(Request(rid=i, max_new_tokens=max_new,
+                           prompt=jax.random.randint(
+                               k, (L,), 2, cfg.vocab_size).tolist(), **kw))
+    return out
+
+
+def _shared_reqs(cfg, n, prefix_len=16, suffix_len=24, max_new=5, seed=5,
+                 **kw):
+    rng = jax.random.key(seed)
+    rng, k = jax.random.split(rng)
+    common = jax.random.randint(k, (prefix_len,), 2, cfg.vocab_size).tolist()
+    out = []
+    for i in range(n):
+        rng, k = jax.random.split(rng)
+        sfx = jax.random.randint(k, (suffix_len,), 2,
+                                 cfg.vocab_size).tolist()
+        out.append(Request(rid=i, prompt=common + sfx, max_new_tokens=max_new,
+                           **kw))
+    return out
+
+
+def _streams_equal(xs, ys):
+    for x, y in zip(xs, ys):
+        assert x.out_tokens == y.out_tokens, \
+            (x.rid, x.out_tokens, y.out_tokens)
+
+
+# ============================================== the bit-exactness grid
+LENS = [40, 7, 23, 55]
+
+
+@pytest.mark.parametrize("chunk", [16, 7])   # dividing-ish and not
+def test_chunked_matches_monolithic_paged(stack, chunk):
+    """Chunk windows (incl. a width that divides neither the prompts nor
+    the block size — boundaries land mid-block) reproduce monolithic
+    streams through the default paged engine."""
+    cfg, model, params = stack
+    a, b = _reqs(cfg, LENS, max_new=6), _reqs(cfg, LENS, max_new=6)
+    mono = ServingEngine(model, params, batch_size=4, max_seq=64,
+                         block_size=16, prefill_chunk=0)
+    chunked = ServingEngine(model, params, batch_size=4, max_seq=64,
+                            block_size=16, prefill_chunk=chunk)
+    mono.run(list(a))
+    chunked.run(list(b))
+    _streams_equal(a, b)
+    assert chunked.metrics["chunked_admissions"] >= 3   # 40, 23, 55 > chunk
+    assert chunked.metrics["chunk_steps"] > 0
+    assert chunked.pool.available == chunked.pool.total
+    chunked.pool.check()
+    # logprobs agree to float tolerance (different XLA programs compute
+    # the prompt-final logits: prefill's last_idx gather vs the window)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x.out_logprobs, y.out_logprobs,
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_matches_monolithic_stripe(stack):
+    """Same property through the fixed-stripe layout (paged=False)."""
+    cfg, model, params = stack
+    a, b = _reqs(cfg, LENS, max_new=6), _reqs(cfg, LENS, max_new=6)
+    mono = ServingEngine(model, params, batch_size=4, max_seq=64,
+                         paged=False, prefill_chunk=0)
+    chunked = ServingEngine(model, params, batch_size=4, max_seq=64,
+                            paged=False, prefill_chunk=16)
+    mono.run(list(a))
+    chunked.run(list(b))
+    _streams_equal(a, b)
+    assert chunked.metrics["chunk_steps"] > 0
+
+
+def test_chunked_matches_monolithic_kernel(stack):
+    """Chunk windows through the Pallas paged-attention read (interpret
+    mode on CPU): kernel replay per window position, streams unchanged."""
+    cfg, model, params = stack
+    lens = [21, 9, 30]
+    a, b = _reqs(cfg, lens, max_new=4), _reqs(cfg, lens, max_new=4)
+    mono = ServingEngine(model, params, batch_size=3, max_seq=64,
+                         block_size=8, use_kernel=False, prefill_chunk=0)
+    chunked = ServingEngine(model, params, batch_size=3, max_seq=64,
+                            block_size=8, use_kernel=True, prefill_chunk=8)
+    mono.run(list(a))
+    chunked.run(list(b))
+    _streams_equal(a, b)
+
+
+def test_chunked_matches_monolithic_speculative(stack):
+    """Speculative engines chunk too: chunk ticks suspend the draft
+    window (speculation resumes when the prompts drain) and greedy
+    streams stay identical to a non-speculative monolithic engine."""
+    cfg, model, params = stack
+    a = _shared_reqs(cfg, 3, suffix_len=30, max_new=8, seed=9)
+    b = _shared_reqs(cfg, 3, suffix_len=30, max_new=8, seed=9)
+    spec = ServingEngine(model, params, batch_size=3, max_seq=96,
+                         block_size=8, draft_model=model,
+                         draft_params=params, speculation=3,
+                         prefill_chunk=8)
+    mono = ServingEngine(model, params, batch_size=3, max_seq=96,
+                         block_size=8, prefill_chunk=0)
+    spec.run(list(a))
+    mono.run(list(b))
+    _streams_equal(a, b)
+    assert spec.metrics["chunk_steps"] > 0     # chunks actually happened
+    assert spec.metrics["verify_steps"] > 0    # and speculation resumed
+
+
+def test_chunked_decode_riders_unperturbed(stack):
+    """THE interleaving regression: slots already decoding when a long
+    prompt chunk-ingests alongside them keep emitting their exact solo
+    streams (their single token rides the chunk window batch)."""
+    cfg, model, params = stack
+    riders = _reqs(cfg, [6, 11], max_new=12, seed=3)
+    solo_copies = _reqs(cfg, [6, 11], max_new=12, seed=3)
+    (long_req,) = _reqs(cfg, [48], max_new=3, seed=4)
+    (long_solo,) = _reqs(cfg, [48], max_new=3, seed=4)
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        block_size=8, prefill_chunk=8)
+    assert eng.add_requests(list(riders)) == 2
+    eng.step()                                  # riders mid-decode
+    assert eng.add_requests([long_req]) == 1    # first chunk only
+    assert eng.slot_pending[2]                  # still owes prompt
+    done = eng.run([])
+    assert len(done) == 3
+    for r, s in zip(riders + [long_req], solo_copies + [long_solo]):
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             block_size=8, prefill_chunk=0)
+        solo.run([s])
+        assert r.out_tokens == s.out_tokens, r.rid
+
+
+# ============================================ sharing: the gate is gone
+def test_long_unshared_suffix_now_shares_and_chunks(stack):
+    """The bounded-suffix trade is dead: a short shared preamble in
+    front of a long document engages sharing — the un-shared suffix
+    chunk-prefills instead of feeding one token per step."""
+    cfg, model, params = stack
+    a = _shared_reqs(cfg, 3, prefix_len=16, suffix_len=30, seed=5)
+    b = _shared_reqs(cfg, 3, prefix_len=16, suffix_len=30, seed=5)
+    on = ServingEngine(model, params, batch_size=3, max_seq=64,
+                       block_size=8, prefix_sharing=True, prefill_chunk=8)
+    off = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        block_size=8, prefix_sharing=False, prefill_chunk=0)
+    on.run(list(a))
+    off.run(list(b))
+    _streams_equal(a, b)
+    assert on.metrics["shared_admissions"] == 2
+    assert on.metrics["prefill_tokens_shared"] >= 16
+    # the suffix drained through chunk windows, not serial catch-up:
+    # 30-token suffixes at chunk 8 — far fewer steps than tokens
+    assert on.metrics["chunk_prefill_tokens"] > 0
+    assert on.metrics["decode_steps"] < off.metrics["decode_steps"] + 30
+    on.pool.check()
+
+
+def test_chunk_written_blocks_register_for_sharing(stack):
+    """A chunk-ingested prompt advertises its blocks in the prefix index
+    exactly like a monolithic prefill: a later identical prompt shares
+    the WHOLE resident prompt, not just the first chunk."""
+    cfg, model, params = stack
+    rng = jax.random.key(31)
+    prompt = jax.random.randint(rng, (42,), 2, cfg.vocab_size).tolist()
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        block_size=8, prefix_sharing=True, prefill_chunk=8)
+    first = Request(rid=0, prompt=list(prompt), max_new_tokens=30)
+    assert eng.add_requests([first]) == 1
+    while eng.slot_pending[0]:                  # drain the chunks
+        eng.step()
+    second = Request(rid=1, prompt=list(prompt), max_new_tokens=2)
+    assert eng.add_requests([second]) == 1
+    assert eng.metrics["shared_admissions"] == 1
+    # the match covered the whole resident prompt (capped at P-1): far
+    # more than the 8-token first chunk
+    assert eng.metrics["prefill_tokens_shared"] >= 40
+    eng.pool.check()
+    done = eng.run([])
+    assert len(done) == 2
+    solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         block_size=8, prefix_sharing=False, prefill_chunk=0)
+    for r in (first, second):
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+# =================================== contention: park/preempt mid-chunk
+def test_park_preempt_between_chunks_resumes_bit_exact(stack):
+    """A chunked admission charges its whole prompt at the gate but only
+    allocates chunk by chunk — a neighbor's decode growth can steal the
+    headroom mid-prompt, parking or preempting the half-prefilled slot.
+    Either way every stream must equal its uncontended solo run."""
+    cfg, model, params = stack
+    (short,) = _reqs(cfg, [6], max_new=24, seed=11)
+    (short2,) = _reqs(cfg, [6], max_new=24, seed=11)
+    (lng,) = _reqs(cfg, [36], max_new=6, seed=12)
+    (lng2,) = _reqs(cfg, [36], max_new=6, seed=12)
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        block_size=4, num_blocks=13, prefill_chunk=8)
+    assert eng.add_requests([short]) == 1
+    eng.step()
+    assert eng.add_requests([lng]) == 1         # 9 blocks charged, 2 held
+    done = eng.run([])
+    assert len(done) == 2
+    # the pool (12 blocks) cannot hold both at full length (8 + 11):
+    # contention mid-chunk actually happened
+    assert eng.metrics["parked_slot_steps"] > 0 \
+        or eng.metrics["preemptions"] > 0
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    for r, s in ((short, short2), (lng, lng2)):
+        solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                             block_size=4, prefill_chunk=0)
+        solo.run([s])
+        assert r.out_tokens == s.out_tokens, r.rid
+
+
+def test_chunk_degrades_under_pool_pressure(stack):
+    """When the pool can only grant part of a chunk window, the slot
+    feeds fewer tokens that step instead of stalling — and still
+    finishes bit-exact."""
+    cfg, model, params = stack
+    (a,) = _reqs(cfg, [30], max_new=4, seed=13)
+    (b,) = _reqs(cfg, [30], max_new=4, seed=13)
+    # 9 allocatable blocks of 4 = 36 tokens: the 16-token chunk windows
+    # can't always be granted whole next to the resident prefix
+    eng = ServingEngine(model, params, batch_size=1, max_seq=64,
+                        block_size=4, num_blocks=10, prefill_chunk=16)
+    eng.run([a])
+    solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         block_size=4, prefill_chunk=0)
+    solo.run([b])
+    assert a.out_tokens == b.out_tokens
+    assert eng.pool.available == eng.pool.total
+
+
+# ======================================================= property churn
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(4, 40), st.integers(1, 6)),
+                min_size=2, max_size=6),
+       st.sampled_from([5, 8, 16]),
+       st.integers(0, 4))
+def test_chunked_churn_property(stack, jobs, chunk, share_prefix_len):
+    """Interleaved chunked admissions + decode + retirement churn (with
+    optional shared prefixes) keeps pool invariants and emits exactly
+    the monolithic engine's streams."""
+    cfg, model, params = stack
+    rng = jax.random.key(sum(L * 7 + n for L, n in jobs) + chunk)
+    rng, k = jax.random.split(rng)
+    common = jax.random.randint(k, (share_prefix_len,), 2,
+                                cfg.vocab_size).tolist()
+    reqs_a, reqs_b = [], []
+    for i, (L, new) in enumerate(jobs):
+        rng, k = jax.random.split(rng)
+        p = common + jax.random.randint(k, (L,), 2, cfg.vocab_size).tolist()
+        reqs_a.append(Request(rid=i, prompt=list(p), max_new_tokens=new))
+        reqs_b.append(Request(rid=i, prompt=list(p), max_new_tokens=new))
+    eng = ServingEngine(model, params, batch_size=3, max_seq=64,
+                        block_size=8, num_blocks=20, prefill_chunk=chunk)
+    mono = ServingEngine(model, params, batch_size=3, max_seq=64,
+                         block_size=8, num_blocks=20, prefill_chunk=0,
+                         prefix_sharing=False)
+    pending = list(reqs_a)
+    while pending or eng.active or eng.waiting or eng._finished_at_admit:
+        n = eng.add_requests(pending)
+        del pending[:n]
+        eng.step()
+        eng.pool.check()
+    mono.run(list(reqs_b))
+    _streams_equal(reqs_a, reqs_b)
+    assert eng.pool.available == eng.pool.total
+
+
+def test_chunk_registration_survives_misaligned_first_chunk(stack):
+    """Regression: a first chunk that is NOT a block multiple must keep
+    the registration chain open — the partially-filled block registers
+    once the chunk steps fill it, so a later identical prompt still
+    shares the whole resident prompt (not just the aligned part of the
+    first chunk)."""
+    cfg, model, params = stack
+    rng = jax.random.key(43)
+    prompt = jax.random.randint(rng, (42,), 2, cfg.vocab_size).tolist()
+    for chunk in (12, 5):           # mid-block, and sub-block (< bs)
+        eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                            block_size=8, prefix_sharing=True,
+                            prefill_chunk=chunk)
+        first = Request(rid=0, prompt=list(prompt), max_new_tokens=30)
+        assert eng.add_requests([first]) == 1
+        while eng.slot_pending[0]:
+            eng.step()
+        second = Request(rid=1, prompt=list(prompt), max_new_tokens=1)
+        assert eng.add_requests([second]) == 1
+        assert eng.metrics["shared_admissions"] == 1, chunk
+        assert eng.metrics["prefill_tokens_shared"] >= 40, chunk
+        eng.pool.check()
+
+
+def test_per_request_zero_chunk_is_monolithic(stack):
+    """An explicit per-request prefill_chunk=0 opts OUT of chunking
+    (matching the engine knob's meaning), and a negative value is a
+    loud error — not silent garbage admission."""
+    cfg, model, params = stack
+    (a,) = _reqs(cfg, [40], max_new=2, seed=27)
+    a.prefill_chunk = 0
+    eng = ServingEngine(model, params, batch_size=1, max_seq=64,
+                        block_size=8, prefill_chunk=8)   # engine chunks
+    eng.run([a])
+    assert eng.metrics["chunked_admissions"] == 0
+    assert eng.metrics["chunk_steps"] == 0
+    (b,) = _reqs(cfg, [10], max_new=2, seed=27)
+    b.prefill_chunk = -4
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        eng.add_requests([b])
+
+
+def test_in_batch_sharing_with_sub_block_first_chunk(stack):
+    """The planner hazard: a chunked source admission with a first chunk
+    SMALLER than a block registers nothing at admission time, so a
+    same-batch peer must not be promised its chains — on a tight pool
+    the peer's broken-promise fallback would allocate blocks the
+    planner never budgeted. Both requests must serve, bit-exact."""
+    cfg, model, params = stack
+    rng = jax.random.key(37)
+    prompt = jax.random.randint(rng, (30,), 2, cfg.vocab_size).tolist()
+    a = Request(rid=0, prompt=list(prompt), max_new_tokens=3)
+    b = Request(rid=1, prompt=list(prompt), max_new_tokens=3)
+    # chunk 5 < block_size 8: the first chunk registers zero full blocks
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        block_size=8, num_blocks=11, prefill_chunk=5)
+    done = eng.run([a, b])
+    assert len(done) == 2
+    assert eng.pool.available == eng.pool.total
+    eng.pool.check()
+    solo = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         block_size=8, prefill_chunk=0)
+    for r in (a, b):
+        (d,) = solo.run([Request(rid=100 + r.rid, prompt=list(r.prompt),
+                                 max_new_tokens=3)])
+        assert d.out_tokens == r.out_tokens, r.rid
+
+
+# ================================================= draft chunked catch-up
+def test_draft_chunked_ingest_matches_in_sync_draft(stack):
+    """A draft that fell several tokens behind (the target ran chunk
+    ticks without it) catches up in ONE ingest call and then proposes
+    exactly what an always-in-sync draft proposes — and the round costs
+    1 + k draft steps, not catch - 1 + k."""
+    from repro.serve.spec import DraftRunner
+    cfg, model, params = stack
+    rng = jax.random.key(41)
+    ctx = jax.random.randint(rng, (19,), 2, cfg.vocab_size).tolist()
+    k = 3
+    greedy = (jnp.zeros(1), jnp.zeros(1, jnp.int32),
+              jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32))
+
+    lagged = DraftRunner(model, params, batch_size=1, max_seq=64)
+    lagged.admit([(0, ctx[:12])])               # cached 12, owes 7
+    steps0 = lagged.steps_run
+    prop_a, _ = lagged.propose([ctx[12:]], [0], k, *greedy)
+    assert lagged.steps_run - steps0 == 1 + k   # one ingest + k proposals
+
+    synced = DraftRunner(model, params, batch_size=1, max_seq=64)
+    synced.admit([(0, ctx[:-1])])               # cached all but the last
+    prop_b, _ = synced.propose([ctx[-1:]], [0], k, *greedy)
+    assert prop_a.tolist() == prop_b.tolist()
+    assert int(lagged.len[0]) == int(synced.len[0]) == len(ctx) - 1
+
+
+# ======================================================= scheduler budget
+def test_scheduler_prefill_budget_paces_admissions(stack):
+    """With a per-tick prefill token budget, a burst of long prompts
+    admits across ticks: continuing chunks are charged first and new
+    admissions wait for a tick with room."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        block_size=8, prefill_chunk=16, prefill_budget=16)
+    sched = Scheduler(eng, prefill_budget=16)
+    reqs = _reqs(cfg, [40, 40, 40], max_new=2, seed=17)
+    for r in reqs:
+        assert sched.submit(r)
+    sched.tick()
+    assert eng.active == 1          # 16-token budget: one first chunk
+    done = sched.drain()
+    assert len(done) == 3
+    # cross-check streams against an unbudgeted engine
+    unb = ServingEngine(model, params, batch_size=4, max_seq=64,
+                        block_size=8, prefill_chunk=0)
+    b = _reqs(cfg, [40, 40, 40], max_new=2, seed=17)
+    unb.run(list(b))
+    _streams_equal(reqs, b)
+
+
+def test_engine_budget_caps_chunk_tokens_per_step(stack):
+    """The engine-side budget bounds pending tokens fed per step across
+    slots (every slot still progresses >= 1 token)."""
+    cfg, model, params = stack
+    eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                        block_size=8, prefill_chunk=16, prefill_budget=8)
+    reqs = _reqs(cfg, [40, 40], max_new=2, seed=19)
+    assert eng.add_requests(list(reqs)) == 2    # first chunks: 16 each
+    before = eng.metrics["chunk_prefill_tokens"]
+    eng.step()
+    fed = eng.metrics["chunk_prefill_tokens"] - before
+    # budget 8, + the >= 1-token progress guarantee for the second slot
+    assert 0 < fed <= 8 + 1
+    done = eng.run([])
+    assert len(done) == 2
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError, match="prefill_budget"):
+        Scheduler(object.__new__(ServingEngine), prefill_budget=0)
+
+
+# ============================================================ knob edges
+def test_engine_rejects_bad_chunk_knobs(stack):
+    cfg, model, params = stack
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(model, params, batch_size=1, max_seq=32,
+                      prefill_chunk=-1)
+    with pytest.raises(ValueError, match="prefill_budget"):
+        ServingEngine(model, params, batch_size=1, max_seq=32,
+                      prefill_budget=0)
+
+
+def test_recurrent_and_moe_never_chunk():
+    """Families that cannot run multi-token windows stay monolithic —
+    and explicitly asking them to chunk is a loud error."""
+    rcfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                               dtype=jnp.float32)
+    rmodel = build_model(rcfg)
+    rparams = rmodel.init(jax.random.key(0))
+    eng = ServingEngine(rmodel, rparams, batch_size=1, max_seq=32)
+    assert eng.prefill_chunk == 0
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ServingEngine(rmodel, rparams, batch_size=1, max_seq=32,
+                      prefill_chunk=8)
+    mcfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                               dtype=jnp.float32)
+    mmodel = build_model(mcfg)
+    mparams = mmodel.init(jax.random.key(0))
+    meng = ServingEngine(mmodel, mparams, batch_size=1, max_seq=32)
+    assert meng.prefill_chunk == 0
+
+
+def test_per_request_chunk_override(stack):
+    """A request's prefill_chunk overrides the engine default for its
+    own ingestion; streams stay identical either way."""
+    cfg, model, params = stack
+    (a,) = _reqs(cfg, [40], max_new=4, seed=23)
+    (b,) = _reqs(cfg, [40], max_new=4, seed=23)
+    b.prefill_chunk = 8
+    eng = ServingEngine(model, params, batch_size=1, max_seq=64,
+                        block_size=8, prefill_chunk=0)   # engine monolithic
+    eng2 = ServingEngine(model, params, batch_size=1, max_seq=64,
+                         block_size=8, prefill_chunk=0)
+    eng.run([a])
+    eng2.run([b])
+    assert a.out_tokens == b.out_tokens
+    assert eng2.metrics["chunked_admissions"] == 1
+    assert eng.metrics["chunked_admissions"] == 0
+
+
+def test_service_rejects_bad_prefill_chunk_payload(stack):
+    """A non-positive / non-int \"prefill_chunk\" is the CLIENT's fault:
+    RequestError, never a replica failure the balancer retries."""
+    from repro.core.services import RequestError
+    from repro.serve.service import make_lm_service
+    cfg, model, params = stack
+    svc = make_lm_service("lm-chunk", model, params, n_replicas=1,
+                          batch_size=1, max_seq=64, prefill_chunk=8)
+    svc.start()
+    rep = svc.replicas[0].handler
+    for bad in (0, -3, True, "16"):
+        with pytest.raises(RequestError, match="prefill_chunk"):
+            rep({"prompt": [5, 6, 7], "prefill_chunk": bad})
+    out = rep({"prompt": [5, 6, 7] * 8, "max_new_tokens": 3,
+               "prefill_chunk": 8})
+    assert len(out["tokens"]) == 3

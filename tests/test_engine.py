@@ -474,10 +474,13 @@ def test_blocks_needed_charges_partial_tail_cow(stack):
     assert eng.blocks_needed(boundary) == 1
 
 
-def test_long_unshared_suffix_prefills_plain(stack):
-    """Catch-up decode feeds the un-shared suffix one token per step, so
-    a short-prefix/long-suffix prompt must NOT engage sharing — one
-    batched prefill beats dozens of serial catch-up steps."""
+def test_long_unshared_suffix_prefills_plain_in_monolithic_mode(stack):
+    """LEGACY monolithic mode (prefill_chunk=0): catch-up decode feeds
+    the un-shared suffix one token per step there, so a short-prefix/
+    long-suffix prompt must NOT engage sharing — one batched prefill
+    beats dozens of serial catch-up steps. (With chunked prefill — the
+    default — the suffix drains chunk-at-a-time and the bound is gone:
+    tests/test_chunked.py::test_long_unshared_suffix_now_shares_and_chunks.)"""
     cfg, model, params = stack
     rng = jax.random.key(29)
     rng, k = jax.random.split(rng)
@@ -485,7 +488,8 @@ def test_long_unshared_suffix_prefills_plain(stack):
     rng, k = jax.random.split(rng)
     tail = jax.random.randint(k, (30,), 2, cfg.vocab_size).tolist()
     eng = ServingEngine(model, params, batch_size=2, max_seq=64,
-                        paged=True, block_size=8, prefix_sharing=True)
+                        paged=True, block_size=8, prefix_sharing=True,
+                        prefill_chunk=0)
     eng.add_requests([Request(rid=0, prompt=list(base), max_new_tokens=20)])
     long_sfx = Request(rid=1, prompt=base[:16] + tail, max_new_tokens=2)
     # suffix (30) > max(block_size, matched 16): full plain cost, and

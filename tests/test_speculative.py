@@ -205,7 +205,7 @@ def test_verify_rejects_recurrent_families(stack):
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     cache = model.init_cache(1, 16)
-    with pytest.raises(ValueError, match="verify_step unsupported"):
+    with pytest.raises(ValueError, match="unsupported for family"):
         model.verify_step(params, jnp.ones((1, 3), jnp.int32), cache,
                           jnp.asarray([4], jnp.int32))
 
