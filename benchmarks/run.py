@@ -46,6 +46,22 @@ MODULES = [
 ]
 
 
+def select_modules(only: str) -> list[str]:
+    """Resolve a ``--only`` comma-filter against MODULES. Every filter
+    must match at least one module — a typo ("pagedkv") used to silently
+    run *nothing* and exit 0, which in CI reads as a green bench run."""
+    filters = [f for f in only.split(",") if f]
+    if not filters:
+        return list(MODULES)
+    for f in filters:
+        if not any(f in name for name in MODULES):
+            raise SystemExit(
+                f"--only filter {f!r} matches no benchmark module; "
+                f"choose from: {', '.join(MODULES)}")
+    return [name for name in MODULES
+            if any(f in name for f in filters)]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -59,10 +75,7 @@ def main() -> None:
     from benchmarks.report import Report
     report = Report(verbose=args.verbose)
     failed_modules = []
-    filters = [f for f in args.only.split(",") if f]
-    for name in MODULES:
-        if filters and not any(f in name for f in filters):
-            continue
+    for name in select_modules(args.only):
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         try:

@@ -77,6 +77,15 @@ class RoundRobinBalancer:
         # a request may retry a failing primary until it crosses max_fails
         # and gets benched (then the backup pool takes over)
         budget = self.max_fails * len(self.primaries) + len(self.backups) + 1
+        # streaming payloads carry an "on_token" callback. Each attempt
+        # wraps it with a fresh delivery counter: a ServiceError BEFORE
+        # the first token is an ordinary failover (the client observed
+        # nothing), but once a token has streamed the request is NOT
+        # replayed — a retry would re-deliver a divergent-length prefix
+        # to a client that already consumed part of the stream. The
+        # failure still counts against the replica's health.
+        on_token = payload.get("on_token") if isinstance(payload, dict) \
+            else None
         while attempts < budget:
             with self._lock:
                 cands = self._candidates()
@@ -87,6 +96,13 @@ class RoundRobinBalancer:
                 else:
                     r = cands[self._rr % len(cands)]
                 self._rr += 1
+            streamed = 0
+            if on_token is not None:
+                def _counting(tok, logp, _inner=on_token):
+                    nonlocal streamed
+                    _inner(tok, logp)
+                    streamed += 1
+                payload = dict(payload, on_token=_counting)
             try:
                 out = r(payload, rng)
                 with self._lock:
@@ -100,6 +116,11 @@ class RoundRobinBalancer:
                 with self._lock:
                     self._record_failure(r)
                     self.stats["failovers"] += 1
+                if streamed:
+                    raise ServiceError(
+                        f"replica failed after streaming {streamed} "
+                        f"tokens; not retrying a partially-delivered "
+                        f"stream ({e})") from e
         raise ServiceError(
             f"all replicas unavailable ({last_err})") from last_err
 

@@ -76,7 +76,20 @@ class Replica:
         return int(fn()) if callable(fn) else 0
 
     def set_up(self, up: bool) -> None:
+        going_down = self._up and not up
         self._up = up
+        if going_down:
+            self.abort()
+
+    def abort(self) -> None:
+        """Kill in-flight work when the replica goes down: streaming
+        handlers expose ``abort()`` to fail their open streams with a
+        retryable ServiceError (the balancer will NOT replay a stream
+        whose first token was already delivered — see
+        ``core/balancer.py``). Plain handlers have nothing in flight."""
+        fn = getattr(self.handler, "abort", None)
+        if callable(fn):
+            fn()
 
     def _serve(self, payload, rng):
         if self.latency is not None and rng is not None:
@@ -114,6 +127,8 @@ class Service:
 
     def stop(self) -> None:
         self.started = False
+        for r in self.replicas:
+            r.abort()
 
     def __call__(self, payload, rng=None):
         if not self.started:

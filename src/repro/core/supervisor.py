@@ -21,6 +21,9 @@ class Supervisor:
     services: dict = field(default_factory=dict)
     max_restarts: int = 3
     backoff_s: float = 0.0          # 0 in tests; supervisord default 1s
+    # injectable so tests drive restart backoff on a virtual clock
+    # (VirtualClock.sleep records and advances instead of blocking)
+    sleep: object = time.sleep
     events: list = field(default_factory=list)
 
     def add(self, svc: Service) -> Service:
@@ -60,7 +63,7 @@ class Supervisor:
                 if attempts > self.max_restarts:
                     raise
                 if self.backoff_s:
-                    time.sleep(self.backoff_s * attempts)
+                    self.sleep(self.backoff_s * attempts)
 
     # ------------------------------------------------------------- control
     def restart(self, name: str) -> None:

@@ -40,6 +40,10 @@ def main() -> None:
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="per-tick prefill token budget (chunk "
                          "continuation + new admissions)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the async dispatch/plan-ahead/"
+                         "commit loop with per-token streaming (reports "
+                         "TTFT and host/device overlap)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
@@ -70,10 +74,36 @@ def main() -> None:
 
     print(f"serving {args.requests} requests on {args.arch} "
           f"({cfg.family}, reduced) — engine batch {args.batch}, "
-          f"policy {args.policy}")
-    for r in reqs:
-        sched.submit(r)
-    done = sched.drain()
+          f"policy {args.policy}"
+          + (" — async streaming loop" if args.stream else ""))
+    if args.stream:
+        from repro.serve.async_loop import AsyncServeLoop
+        loop = AsyncServeLoop(sched, name=f"{args.arch}/0")
+        ttft: dict = {}
+        handles = []
+        for r in reqs:
+            def _first(tok, logp, rid=r.rid, t0=time.perf_counter()):
+                ttft.setdefault(rid, time.perf_counter() - t0)
+            handles.append(loop.submit(r, _first))
+        done = []
+        for h in handles:
+            try:
+                loop.wait(h)
+                done.append(h.request)
+            except Exception as e:  # shed / queue full
+                print(f"  req {h.rid}: {e}")
+        if ttft:
+            print(f"TTFT p50={statistics.median(ttft.values())*1e3:.0f}ms "
+                  f"max={max(ttft.values())*1e3:.0f}ms; "
+                  f"loop: {loop.metrics['ticks']} ticks, "
+                  f"{loop.metrics['planned']} admissions planned in-flight "
+                  f"(plan {loop.metrics['plan_time_s']*1e3:.0f}ms hidden "
+                  f"behind {loop.metrics['commit_wait_s']*1e3:.0f}ms of "
+                  f"device wait)")
+    else:
+        for r in reqs:
+            sched.submit(r)
+        done = sched.drain()
     lats = [r.latency_s for r in done]
     toks = sum(len(r.out_tokens) for r in done)
     if lats:

@@ -76,6 +76,12 @@ class BlockPool:
             raise ValueError("block_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # monotonic mutation stamp: bumped by every state change that
+        # could alter a prefix match or an admission cost (alloc, free,
+        # acquire, register, deregister). The scheduler's plan-ahead
+        # stamps its precomputed admission costs with this and re-walks
+        # only when the pool actually moved underneath the plan.
+        self.version = 0
         self._free = list(range(num_blocks - 1, 0, -1))   # LIFO, 0 reserved
         self._holders: dict[int, list] = {}               # block -> holders
         # prefix index, chained by PARENT BLOCK rather than keyed by the
@@ -164,6 +170,7 @@ class BlockPool:
             got.append(b)
         for b in got:
             self._holders[b] = [owner]
+        self.version += 1
         return got
 
     def acquire(self, block: int, owner) -> None:
@@ -180,11 +187,13 @@ class BlockPool:
             if block in self._block_key:
                 self._free.remove(block)     # revive a cached prefix block
                 self._holders[block] = [owner]
+                self.version += 1
                 return
             raise ValueError(f"block {block}: acquire of a free block")
         if owner in holders:
             raise ValueError(f"block {block}: {owner!r} already holds it")
         holders.append(owner)
+        self.version += 1
 
     def free(self, blocks: list, owner) -> None:
         """Drop ``owner``'s hold on each of ``blocks``; a block returns
@@ -205,6 +214,7 @@ class BlockPool:
             if not holders:
                 del self._holders[b]
                 self._free.append(b)
+        self.version += 1
 
     # ------------------------------------------------------- prefix index
     ROOT = None        # parent of a sequence's first block
@@ -228,6 +238,7 @@ class BlockPool:
             return None                        # already indexed elsewhere
         self._block_key[block] = (parent, tokens)
         self._children.setdefault(parent, []).append(block)
+        self.version += 1
         return block
 
     def deregister(self, block: int) -> None:
@@ -239,6 +250,7 @@ class BlockPool:
         key = self._block_key.pop(block, None)
         if key is None:
             return
+        self.version += 1
         for child in list(self._children.get(block, ())):
             self.deregister(child)
         bucket = self._children[key[0]]

@@ -155,6 +155,29 @@ def _bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+class _Tick:
+    """One **dispatched** engine step: the device work is already in
+    flight (JAX async dispatch returns before the computation finishes),
+    the host-side bookkeeping is deferred to :meth:`commit`. Between
+    ``dispatch_step()`` and ``commit()`` the engine's host state must be
+    treated as read-only — that window is exactly where the async serve
+    loop overlaps next-tick planning (admission cost walks, intake
+    validation) with the device step. Commit is one-shot."""
+
+    __slots__ = ("_commit",)
+
+    def __init__(self, commit_fn):
+        self._commit = commit_fn
+
+    def commit(self) -> list:
+        """Synchronize on the device results, run the per-slot
+        bookkeeping, and return the finished requests."""
+        fn, self._commit = self._commit, None
+        if fn is None:
+            raise RuntimeError("tick already committed")
+        return fn()
+
+
 class ServingEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, plan=None, paged: bool | None = None,
@@ -163,12 +186,16 @@ class ServingEngine:
                  use_kernel: bool = False, draft_model=None,
                  draft_params=None, speculation: int = 0,
                  prefill_chunk: int | None = None,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None,
+                 clock=time.perf_counter):
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.plan = plan
+        # injectable time source (completion stamps); a VirtualClock
+        # here makes every latency/deadline observable deterministic
+        self.clock = clock
         cache_spec = jax.eval_shape(lambda: model.init_cache(1, _MIN_BUCKET))
         pure_attn = set(cache_spec) <= {"k", "v"}
         # MoE routing flattens the whole (rows x tokens) block into one
@@ -435,7 +462,7 @@ class ServingEngine:
                         "spec_proposed": 0, "spec_accepted": 0,
                         "spec_blocks_rolled_back": 0,
                         "chunked_admissions": 0, "chunk_steps": 0,
-                        "chunk_prefill_tokens": 0}
+                        "chunk_prefill_tokens": 0, "cancelled": 0}
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -755,7 +782,7 @@ class ServingEngine:
             if P > self.max_seq:
                 # a preempted request regrew past capacity: it cannot be
                 # re-prefilled — finish it as capacity-truncated
-                r.done_s = time.perf_counter()
+                r.done_s = self.clock()
                 self.metrics["completed"] += 1
                 self._finished_at_admit.append(r)
                 self._waiting.remove(r)
@@ -1104,9 +1131,9 @@ class ServingEngine:
             self.slot_blocks[slot] = []
             self.block_table[slot, :] = 0
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, *, cancelled: bool = False) -> None:
         req = self.slot_req[slot]
-        req.done_s = time.perf_counter()
+        req.done_s = self.clock()
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
@@ -1115,9 +1142,33 @@ class ServingEngine:
         self._release_blocks(slot)
         if self.draft is not None:
             self.draft.reset(slot)
+        if cancelled:
+            self.metrics["cancelled"] += 1
+            return
         self.metrics["completed"] += 1
         if req.finished_by_stop and len(req.out_tokens) < req.max_new_tokens:
             self.metrics["stop_token_exits"] += 1
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` mid-flight: retire its slot (blocks
+        freed, draft state reset, slot recyclable this very tick) or
+        drop it from the preempted backlog. Returns False when the
+        engine doesn't hold it (already finished, or still queued in
+        front of the engine — the scheduler owns that case). Must NOT
+        be called between ``dispatch_step()`` and ``commit()``: the
+        in-flight tick's bookkeeping indexes the slots it dispatched
+        with — the async loop applies cancels at the loop boundary."""
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self._retire(i, cancelled=True)
+                return True
+        for r in list(self._waiting):
+            if r.rid == rid:
+                self._waiting.remove(r)
+                r.done_s = self.clock()
+                self.metrics["cancelled"] += 1
+                return True
+        return False
 
     def _preempt(self, slot: int) -> None:
         """Evict a slot under pool exhaustion: free its blocks and queue
@@ -1246,13 +1297,15 @@ class ServingEngine:
             self.block_table[i, keep:] = 0
             self.metrics["spec_blocks_rolled_back"] += len(extra)
 
-    def _spec_step(self, active: list, n_spec, finished: list) -> list:
-        """One draft-and-verify step. ``n_spec[i]`` proposals for each
-        speculating slot (0 for riders: pending catch-up, opted-out, or
-        watermark-degraded slots — they feed one real token through the
-        same verify batch and advance by one, exactly the plain step).
-        Commits each row's accepted prefix + bonus token, rolls the pool
-        back to the committed watermark, and advances the draft."""
+    def _spec_step(self, active: list, n_spec, finished: list) -> _Tick:
+        """Dispatch one draft-and-verify step. ``n_spec[i]`` proposals
+        for each speculating slot (0 for riders: pending catch-up,
+        opted-out, or watermark-degraded slots — they feed one real
+        token through the same verify batch and advance by one, exactly
+        the plain step). The returned tick's commit synchronizes on the
+        verify outputs, commits each row's accepted prefix + bonus
+        token, rolls the pool back to the committed watermark, and
+        advances the draft."""
         k = self.spec_k
         temps, top_ks, seeds, ctrs = self._sampling_slots()
         rows = [i for i in active if n_spec[i] > 0]
@@ -1292,8 +1345,14 @@ class ServingEngine:
                 ns, temps, top_ks, seeds, ctrs)
         self.metrics["decode_steps"] += 1
         self.metrics["verify_steps"] += 1
+        return _Tick(lambda: self._commit_spec(active, n_spec, finished,
+                                               totals, a, out_toks, lps))
+
+    def _commit_spec(self, active, n_spec, finished, totals, a, out_toks,
+                     lps) -> list:
         a, out_toks, lps = np.asarray(a), np.asarray(out_toks), \
             np.asarray(lps)
+        k = self.spec_k
         for i in active:
             r = self.slot_req[i]
             if self.slot_pending[i]:
@@ -1337,8 +1396,8 @@ class ServingEngine:
         return finished
 
     def _chunk_step(self, active: list, chunk_want: dict,
-                    finished: list) -> list:
-        """One **chunk window** step: every slot with pending prompt
+                    finished: list) -> _Tick:
+        """Dispatch one **chunk window** step: every slot with pending prompt
         tokens feeds up to its chunk of them (K/V written at its own
         positions, attending causally against its resident prefix) while
         decode slots ride the same batch with their single next token —
@@ -1378,6 +1437,10 @@ class ServingEngine:
                 top_ks, seeds, ctrs)
         self.metrics["decode_steps"] += 1
         self.metrics["chunk_steps"] += 1
+        return _Tick(lambda: self._commit_chunk(active, n_fed, finished,
+                                                nxt, logp))
+
+    def _commit_chunk(self, active, n_fed, finished, nxt, logp) -> list:
         nxt, logp = np.asarray(nxt), np.asarray(logp)
         for i in active:
             r = self.slot_req[i]
@@ -1399,16 +1462,32 @@ class ServingEngine:
         return finished
 
     def step(self) -> list:
-        """One decode step over all active slots (each at its own length)
-        — a draft-and-verify multi-token step when the engine speculates
-        and any slot has room to, a chunk-window step when any slot owes
-        more than one pending prompt token (prompt ingestion interleaved
-        with everyone else's decode). Parked slots ride the batch but
-        emit nothing. Returns finished requests."""
+        """One decode step over all active slots. Equivalent to
+        ``dispatch_step().commit()`` — the synchronous drain every test
+        and bench compares the async loop against."""
+        return self.dispatch_step().commit()
+
+    def dispatch_step(self) -> _Tick:
+        """Dispatch one decode step over all active slots (each at its
+        own length) — a draft-and-verify multi-token step when the
+        engine speculates and any slot has room to, a chunk-window step
+        when any slot owes more than one pending prompt token (prompt
+        ingestion interleaved with everyone else's decode). Parked slots
+        ride the batch but emit nothing.
+
+        All host-side planning (capacity retires, chunk budgeting,
+        speculative windows, block growth) happens here, then the jitted
+        device call is *launched* — JAX async dispatch returns before
+        the computation finishes. The returned :class:`_Tick`'s
+        ``commit()`` blocks on the result and applies per-slot
+        bookkeeping, returning finished requests. Between dispatch and
+        commit the engine's slot state must not be mutated (no
+        ``cancel``/``add_requests``) — that window is for *planning*
+        (``admission_costs`` etc.), which only reads."""
         finished, self._finished_at_admit = self._finished_at_admit, []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return finished
+            return _Tick(lambda: finished)
         # any slot past capacity would write out of bounds — finish it now
         for i in list(active):
             if self.slot_len[i] >= self.max_seq:
@@ -1466,7 +1545,7 @@ class ServingEngine:
             finished.extend(self._finished_at_admit)
             self._finished_at_admit = []
         if not active:
-            return finished
+            return _Tick(lambda: finished)
         if self.spec_k and any(n_spec[i] > 0 for i in active):
             return self._spec_step(active, n_spec, finished)
         if chunking:
@@ -1490,6 +1569,10 @@ class ServingEngine:
                 self.params, jnp.asarray(tok), self.caches,
                 jnp.asarray(self.slot_len), *samp)
         self.metrics["decode_steps"] += 1
+        return _Tick(lambda: self._commit_decode(active, finished, nxt,
+                                                 logp))
+
+    def _commit_decode(self, active, finished, nxt, logp) -> list:
         nxt, logp = np.asarray(nxt), np.asarray(logp)
         for i in active:
             r = self.slot_req[i]

@@ -56,7 +56,6 @@ protect, and an over-budget prompt must not livelock).
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -75,6 +74,8 @@ class SchedulerStats:
     queue_peak: int = 0
     slo_hits: int = 0
     slo_misses: int = 0
+    planned_ahead: int = 0          # admission costs precomputed off-tick
+    plan_hits: int = 0              # fill() decisions served from the cache
     latencies_s: list = field(default_factory=list)
     queue_wait_s: list = field(default_factory=list)
     completed_by_priority: dict = field(default_factory=dict)
@@ -96,7 +97,7 @@ class Scheduler:
 
     def __init__(self, engine: ServingEngine, *, policy: str = "fifo",
                  max_queue: int = 0, pressure_shed: float | None = None,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None, clock=None):
         assert policy in POLICIES, policy
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError(f"prefill_budget must be >= 1, got "
@@ -108,10 +109,17 @@ class Scheduler:
         # per-tick cap on prefill tokens (chunk continuation + new
         # admissions); None = unbudgeted
         self.prefill_budget = prefill_budget
+        # shares the engine's clock by default so deadlines, queue waits,
+        # and engine latency stamps live on one timeline (virtual in tests)
+        self.clock = clock if clock is not None else engine.clock
         self.queue: deque = deque()
         self.stats = SchedulerStats()
         self._enq_t: dict[int, float] = {}
         self.shed_requests: list = []
+        # plan-ahead cache: rid -> (pool_version, (need, cost)); entries
+        # are only valid while the pool hasn't changed since they were
+        # computed (see _pool_version)
+        self._plan: dict[int, tuple[int, tuple]] = {}
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> bool:
@@ -126,11 +134,11 @@ class Scheduler:
             self.stats.rejected += 1
             return False
         if self.policy == "deadline" and req.deadline_s is not None \
-                and req.deadline_s <= time.perf_counter():
+                and req.deadline_s <= self.clock():
             self.stats.rejected += 1
             return False
         self.queue.append(req)
-        self._enq_t[req.rid] = time.perf_counter()
+        self._enq_t[req.rid] = self.clock()
         self.stats.admitted += 1
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
         return True
@@ -154,8 +162,9 @@ class Scheduler:
         return 0
 
     def _shed(self, req: Request) -> None:
-        req.done_s = time.perf_counter()
+        req.done_s = self.clock()
         self._enq_t.pop(req.rid, None)
+        self._plan.pop(req.rid, None)
         self.stats.shed += 1
         self.shed_requests.append(req)
 
@@ -193,11 +202,67 @@ class Scheduler:
             demand -= self.engine.blocks_needed(req)
             self._shed(req)
 
+    # --------------------------------------------------------- plan-ahead
+    def _pool_version(self) -> int:
+        """Validity stamp for cached admission costs. Only a
+        prefix-sharing engine's costs depend on pool state (the
+        prefix-match walk reads the index, which ``pool.version`` bumps
+        on every mutation); stripe engines and non-sharing paged
+        engines price an admission as a pure function of the request,
+        so a constant stamp never invalidates — a decode-step alloc or
+        a retire's free must not flush plans it cannot have changed."""
+        if self.engine.paged and self.engine.prefix_sharing:
+            return self.engine.pool.version
+        return 0
+
+    def plan_ahead(self, limit: int = 32) -> int:
+        """Precompute admission costs for up to ``limit`` queued
+        candidates so the next ``fill()`` finds them cached. This is the
+        host work the async serve loop hides behind the in-flight device
+        step (dispatch → **plan** → commit): it only *reads* engine and
+        pool state, so it is safe between dispatch and commit. Returns
+        the number of requests planned."""
+        v = self._pool_version()
+        n = 0
+        for req in list(self.queue)[:limit]:
+            hit = self._plan.get(req.rid)
+            if hit is not None and hit[0] == v:
+                continue
+            self._plan[req.rid] = (v, self.engine.admission_costs(req))
+            n += 1
+        self.stats.planned_ahead += n
+        return n
+
+    def _planned_costs(self, req: Request) -> tuple:
+        """(need, cost) for admitting ``req`` — from the plan-ahead cache
+        when still valid, else one fresh prefix-match walk."""
+        hit = self._plan.pop(req.rid, None)
+        if hit is not None and hit[0] == self._pool_version():
+            self.stats.plan_hits += 1
+            return hit[1]
+        return self.engine.admission_costs(req)
+
+    # ------------------------------------------------------------- cancel
+    def cancel(self, rid: int) -> bool:
+        """Abandon a request wherever it lives: still queued (removed,
+        nothing was computed) or mid-flight in the engine (slot retired,
+        KV blocks freed). Returns False if the rid is unknown — e.g.
+        already finished. Must not be called between the engine's
+        ``dispatch_step`` and ``commit``."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                req.done_s = self.clock()
+                self._enq_t.pop(rid, None)
+                self._plan.pop(rid, None)
+                return True
+        return self.engine.cancel(rid)
+
     # ------------------------------------------------------------ serving
-    def tick(self) -> list:
-        """Fill free slots (one batched prefill, bounded by pool blocks
-        and the per-tick prefill token budget), run one decode step.
-        Returns finished requests."""
+    def fill(self) -> None:
+        """Admission half of a tick: shed on memory pressure, then fill
+        free engine slots from the queue (one batched prefill, bounded
+        by pool blocks and the per-tick prefill token budget)."""
         if self.pressure_shed is not None and self.queue \
                 and self.engine.memory_pressure() >= self.pressure_shed:
             self._shed_for_memory_pressure()
@@ -214,12 +279,13 @@ class Scheduler:
             i = self._next_index()
             req = self.queue[i]
             if self.policy == "deadline" and req.deadline_s is not None \
-                    and req.deadline_s <= time.perf_counter():
+                    and req.deadline_s <= self.clock():
                 del self.queue[i]
                 self._shed(req)
                 continue
             # one prefix-match walk per candidate answers both gates
-            need, cost = self.engine.admission_costs(req)
+            # (or zero walks, when plan_ahead() already did it)
+            need, cost = self._planned_costs(req)
             if not self.engine.can_admit(req, planned_blocks, need=need):
                 break               # pool full: head waits for block frees
             if budget is not None:
@@ -241,10 +307,13 @@ class Scheduler:
             # (preempted requests resume first): requeue the remainder
             for req in reversed(batch[admitted:]):
                 self.queue.appendleft(req)
-            now = time.perf_counter()
+            now = self.clock()
             for req in batch[:admitted]:
                 self.stats.queue_wait_s.append(now - self._enq_t.pop(req.rid))
-        done = self.engine.step()
+
+    def account(self, done: list) -> list:
+        """Stats half of a tick: latency/SLO bookkeeping for the finished
+        requests one engine step returned."""
         self.stats.ticks += 1
         for r in done:
             self.stats.completed += 1
@@ -257,6 +326,14 @@ class Scheduler:
                 else:
                     self.stats.slo_misses += 1
         return done
+
+    def tick(self) -> list:
+        """Fill free slots, run one decode step, account the finishers.
+        Returns finished requests. The async serve loop runs the same
+        three phases but slips plan-ahead work between the engine's
+        dispatch and commit."""
+        self.fill()
+        return self.account(self.engine.step())
 
     def drain(self) -> list:
         """Run until queue and engine (slots + preempted backlog) empty."""

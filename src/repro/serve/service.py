@@ -9,18 +9,21 @@ across machines.
 
 Payloads are ``{"prompt": [...], "max_new_tokens": n, ...}`` dicts;
 the reply carries the generated tokens plus per-request latency so the
-front-end can report Table-6-style stage timings.
+front-end can report Table-6-style stage timings. A payload may carry an
+``"on_token"`` callable — the replica then streams every generated
+``(token, logprob)`` to it as decode ticks commit, instead of the client
+seeing output only at completion (see ``docs/serving.md``).
 """
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any
 
 from repro.core.balancer import deploy
 from repro.core.services import (Replica, RequestError, Service,
                                  ServiceError)
+from repro.serve.async_loop import AsyncServeLoop
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.scheduler import Scheduler
@@ -30,88 +33,112 @@ from repro.serve.scheduler import Scheduler
 class LMReplica:
     """One engine-backed deployment of an LM service.
 
-    The handler is synchronous (submit + drain) to match the in-process
-    transport of the other PaaS replicas; ``load()`` exposes queue depth
-    + occupied slots so the balancer can route least-loaded.
+    Each replica owns an :class:`AsyncServeLoop` pumping its engine as a
+    dispatch → plan-ahead → commit pipeline; ``__call__`` stays a
+    synchronous handler (submit a stream handle, pump until it
+    resolves) to match the in-process transport of the other PaaS
+    replicas, while ``"on_token"`` payloads observe tokens per tick.
+    ``load()`` exposes intake + queue depth + occupied slots so the
+    balancer can route least-loaded.
     """
     name: str
     scheduler: Scheduler
     _rid: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
+    loop: AsyncServeLoop = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.loop = AsyncServeLoop(self.scheduler, name=self.name)
 
     def load(self) -> int:
-        return len(self.scheduler.queue) + self.scheduler.engine.load()
+        return self.loop.load()
+
+    def abort(self) -> int:
+        """Fail all in-flight streams with a retryable ServiceError and
+        reset serving state — called when the replica is stopped or
+        marked down mid-stream (supervisor restart, health flip)."""
+        return self.loop.abort()
+
+    def _parse(self, payload: dict, rid: int) -> Request:
+        samp = payload.get("sampling", GREEDY)
+        if isinstance(samp, dict):
+            try:
+                samp = SamplingParams(**samp)
+            except TypeError as e:
+                # client error: no other replica can parse it either
+                raise RequestError(f"{self.name}: bad sampling "
+                                   f"params {samp!r}: {e}") from e
+        if not isinstance(samp, SamplingParams):
+            raise RequestError(f"{self.name}: \"sampling\" must be a "
+                               f"dict or SamplingParams, got "
+                               f"{type(samp).__name__}")
+        spec = payload.get("speculation")
+        if spec is not None and (isinstance(spec, bool)
+                                 or not isinstance(spec, int)
+                                 or spec < 0):
+            # same client-error contract as "sampling": a value the
+            # engine would choke on mid-tick must not look like a
+            # replica failure to the balancer
+            raise RequestError(f"{self.name}: \"speculation\" must be "
+                               f"a non-negative int, got {spec!r}")
+        chunk = payload.get("prefill_chunk")
+        if chunk is not None and (isinstance(chunk, bool)
+                                  or not isinstance(chunk, int)
+                                  or chunk < 1):
+            # the payload contract is positive-int-or-absent (absent
+            # = engine default); non-positive values are a client
+            # error, not a replica failure. (Engine-internal
+            # Request.prefill_chunk=0 is a valid monolithic opt-out;
+            # the HTTP-ish payload deliberately doesn't expose it.)
+            raise RequestError(f"{self.name}: \"prefill_chunk\" must "
+                               f"be a positive int, got {chunk!r}")
+        req = Request(rid=rid, prompt=list(payload["prompt"]),
+                      max_new_tokens=payload.get("max_new_tokens", 8),
+                      stop_tokens=tuple(payload.get("stop_tokens", ())),
+                      priority=payload.get("priority", 0),
+                      deadline_s=payload.get("deadline_s"),
+                      sampling=samp,
+                      speculation=payload.get("speculation"),
+                      prefill_chunk=chunk)
+        # latency and deadlines live on the scheduler's timeline
+        # (virtual in tests, perf_counter in production)
+        req.submitted_s = self.scheduler.clock()
+        # client errors: no other replica can serve these either, so
+        # they must NOT look like replica failures to the balancer
+        eng = self.scheduler.engine
+        if len(req.prompt) > eng.max_seq:
+            raise RequestError(f"{self.name}: prompt length "
+                               f"{len(req.prompt)} > max_seq "
+                               f"{eng.max_seq}")
+        if eng.paged and eng.blocks_worst_case(req) > eng.pool.total:
+            raise RequestError(f"{self.name}: prompt needs "
+                               f"{eng.blocks_worst_case(req)} KV blocks "
+                               f"> pool total {eng.pool.total}")
+        if req.deadline_s is not None \
+                and req.deadline_s <= self.scheduler.clock():
+            raise RequestError(f"{self.name}: deadline already expired")
+        return req
+
+    def submit(self, payload: dict):
+        """Validate a payload and hand it to the serve loop; returns the
+        StreamHandle (callers that want the blocking contract use
+        ``__call__``)."""
+        with self._lock:
+            self._rid += 1
+            rid = self._rid
+        on_token = payload.get("on_token")
+        if on_token is not None and not callable(on_token):
+            raise RequestError(f"{self.name}: \"on_token\" must be "
+                               f"callable, got {type(on_token).__name__}")
+        req = self._parse(payload, rid)
+        return self.loop.submit(req, on_token)
 
     def __call__(self, payload: dict) -> dict:
-        with self._lock:                   # one engine = one decode stream
-            self._rid += 1
-            samp = payload.get("sampling", GREEDY)
-            if isinstance(samp, dict):
-                try:
-                    samp = SamplingParams(**samp)
-                except TypeError as e:
-                    # client error: no other replica can parse it either
-                    raise RequestError(f"{self.name}: bad sampling "
-                                       f"params {samp!r}: {e}") from e
-            if not isinstance(samp, SamplingParams):
-                raise RequestError(f"{self.name}: \"sampling\" must be a "
-                                   f"dict or SamplingParams, got "
-                                   f"{type(samp).__name__}")
-            spec = payload.get("speculation")
-            if spec is not None and (isinstance(spec, bool)
-                                     or not isinstance(spec, int)
-                                     or spec < 0):
-                # same client-error contract as "sampling": a value the
-                # engine would choke on mid-tick must not look like a
-                # replica failure to the balancer
-                raise RequestError(f"{self.name}: \"speculation\" must be "
-                                   f"a non-negative int, got {spec!r}")
-            chunk = payload.get("prefill_chunk")
-            if chunk is not None and (isinstance(chunk, bool)
-                                      or not isinstance(chunk, int)
-                                      or chunk < 1):
-                # the payload contract is positive-int-or-absent (absent
-                # = engine default); non-positive values are a client
-                # error, not a replica failure. (Engine-internal
-                # Request.prefill_chunk=0 is a valid monolithic opt-out;
-                # the HTTP-ish payload deliberately doesn't expose it.)
-                raise RequestError(f"{self.name}: \"prefill_chunk\" must "
-                                   f"be a positive int, got {chunk!r}")
-            req = Request(rid=self._rid, prompt=list(payload["prompt"]),
-                          max_new_tokens=payload.get("max_new_tokens", 8),
-                          stop_tokens=tuple(payload.get("stop_tokens", ())),
-                          priority=payload.get("priority", 0),
-                          deadline_s=payload.get("deadline_s"),
-                          sampling=samp,
-                          speculation=payload.get("speculation"),
-                          prefill_chunk=chunk)
-            # client errors: no other replica can serve these either, so
-            # they must NOT look like replica failures to the balancer
-            eng = self.scheduler.engine
-            if len(req.prompt) > eng.max_seq:
-                raise RequestError(f"{self.name}: prompt length "
-                                   f"{len(req.prompt)} > max_seq "
-                                   f"{eng.max_seq}")
-            if eng.paged and eng.blocks_worst_case(req) > eng.pool.total:
-                raise RequestError(f"{self.name}: prompt needs "
-                                   f"{eng.blocks_worst_case(req)} KV blocks "
-                                   f"> pool total {eng.pool.total}")
-            if req.deadline_s is not None \
-                    and req.deadline_s <= time.perf_counter():
-                raise RequestError(f"{self.name}: deadline already expired")
-            if not self.scheduler.submit(req):
-                # queue full — backpressure; another replica may have room
-                raise ServiceError(f"{self.name}: queue full")
-            done = self.scheduler.drain()
-            hit = [d for d in done if d.rid == req.rid]
-            if not hit:                    # shed after admission (deadline)
-                raise RequestError(f"{self.name}: request {req.rid} shed "
-                                   f"past its deadline")
-            return {"tokens": hit[0].out_tokens,
-                    "logprobs": hit[0].out_logprobs,
-                    "latency_s": hit[0].latency_s,
-                    "replica": self.name}
+        # queue-full surfaces from the loop as a retryable ServiceError;
+        # sheds and disconnects as RequestError — same taxonomy the
+        # drain-based handler had
+        return self.loop.wait(self.submit(payload))
 
 
 def make_lm_service(name: str, model, params, *, n_replicas: int = 1,

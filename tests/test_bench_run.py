@@ -1,0 +1,38 @@
+"""Benchmark harness CLI: the ``--only`` comma-filter must resolve
+loudly — a typo that silently ran zero modules used to read as a green
+bench run in CI."""
+import sys
+from pathlib import Path
+
+import pytest
+
+# benchmarks/ is a plain directory (no __init__.py) at the repo root,
+# which isn't on sys.path when pytest runs from tests/
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.run import MODULES, select_modules  # noqa: E402
+
+
+def test_empty_filter_selects_everything():
+    assert select_modules("") == list(MODULES)
+
+
+def test_substring_filter_selects_matching_modules():
+    assert select_modules("paged_kv") == ["bench_paged_kv"]
+    assert select_modules("serving,speculative") == [
+        "bench_serving", "bench_speculative"]
+
+
+def test_filter_preserves_module_order_not_filter_order():
+    assert select_modules("speculative,serving") == [
+        "bench_serving", "bench_speculative"]
+
+
+def test_unknown_filter_is_a_hard_error():
+    with pytest.raises(SystemExit, match="pagedkv.*matches no benchmark"):
+        select_modules("pagedkv")
+
+
+def test_one_bad_filter_fails_even_with_good_ones():
+    with pytest.raises(SystemExit, match="nope"):
+        select_modules("serving,nope")

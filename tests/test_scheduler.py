@@ -1,13 +1,17 @@
 """Scheduler: admission, continuous batching, SPF vs FIFO, bounded queue,
-priority tiers, deadline (EDF) shedding, queue-wait stats."""
+priority tiers, deadline (EDF) shedding, queue-wait stats.
+
+Deadline/SLO tests run on a VirtualClock (engine + scheduler share it):
+expiry is decided by explicit ``advance`` calls, never by how fast the
+CI host happens to run — tier-1 stays sleep-free and deterministic."""
 import dataclasses
-import time
 
 import jax
 import pytest
 
 from repro.configs.base import get_config
 from repro.models.model import build_model
+from repro.serve.clock import VirtualClock
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.scheduler import Scheduler
 
@@ -19,9 +23,9 @@ def engine_factory():
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    def make(batch=2, max_seq=64):
+    def make(batch=2, max_seq=64, **kw):
         return ServingEngine(model, params, batch_size=batch,
-                             max_seq=max_seq), cfg
+                             max_seq=max_seq, **kw), cfg
     return make
 
 
@@ -146,28 +150,30 @@ def test_priority_tiers_served_first(engine_factory):
 # ------------------------------------------------------------- deadline
 def test_deadline_policy_serves_edf_order(engine_factory):
     eng, cfg = engine_factory(batch=1)
-    s = Scheduler(eng, policy="deadline")
+    eng.clock = vc = VirtualClock(start=1000.0)
+    s = Scheduler(eng, policy="deadline")    # shares the engine's clock
     reqs = _reqs(cfg, [8, 8, 8], max_new=2)
-    now = time.perf_counter()
-    reqs[0].deadline_s = now + 500.0
-    reqs[1].deadline_s = now + 100.0         # tightest -> first
+    reqs[0].deadline_s = vc.now() + 500.0
+    reqs[1].deadline_s = vc.now() + 100.0    # tightest -> first
     reqs[2].deadline_s = None                # no SLO -> last
     for r in reqs:
         s.submit(r)
     done = s.drain()
     assert [r.rid for r in done] == [1, 0, 2]
-    assert s.stats.slo_hits == 2             # generous deadlines were met
+    assert s.stats.slo_hits == 2             # virtual time never advanced
     assert s.stats.slo_misses == 0
 
 
 def test_deadline_sheds_expired_requests(engine_factory):
     eng, cfg = engine_factory(batch=1)
+    eng.clock = vc = VirtualClock(start=1000.0)
     s = Scheduler(eng, policy="deadline")
     live, doomed = _reqs(cfg, [8, 8], max_new=2)
-    live.deadline_s = time.perf_counter() + 500.0
+    live.deadline_s = vc.now() + 500.0
     s.submit(live)
     s.submit(doomed)
-    doomed.deadline_s = time.perf_counter() - 1.0   # expires in the queue
+    doomed.deadline_s = vc.now() + 1.0
+    vc.advance(2.0)                          # expires in the queue
     done = s.drain()
     assert [r.rid for r in done] == [live.rid]
     assert s.stats.shed == 1
@@ -177,9 +183,10 @@ def test_deadline_sheds_expired_requests(engine_factory):
 
 def test_deadline_rejects_expired_at_submit(engine_factory):
     eng, cfg = engine_factory(batch=1)
+    eng.clock = vc = VirtualClock(start=1000.0)
     s = Scheduler(eng, policy="deadline")
     (dead,) = _reqs(cfg, [8], max_new=2)
-    dead.deadline_s = time.perf_counter() - 1.0
+    dead.deadline_s = vc.now() - 1.0
     assert not s.submit(dead)
     assert s.stats.rejected == 1
     assert not s.queue
@@ -289,12 +296,47 @@ def test_pool_occupancy_visible_to_scheduler(paged_factory):
     assert eng.memory_pressure() == 0.0
 
 
+def test_plan_ahead_caches_admission_costs(engine_factory):
+    """Candidates planned during the in-flight device window are
+    consumed by later fills without re-walking admission costs: a
+    non-sharing engine prices admission as a pure function of the
+    request, so its plans never go stale."""
+    eng, cfg = engine_factory(batch=1, prefix_sharing=False)
+    s = Scheduler(eng)
+    for r in _reqs(cfg, [8, 10, 6], max_new=2):
+        s.submit(r)
+    assert s.plan_ahead() == 3
+    assert s.plan_ahead() == 0           # cached and still valid
+    s.drain()
+    assert s.stats.plan_hits == 3        # every fill hit the plan cache
+    assert s.stats.planned_ahead == 3
+    assert s.stats.completed == 3
+
+
+def test_plan_goes_stale_when_prefix_index_can_move(engine_factory):
+    """A prefix-sharing engine's admission costs read the prefix index,
+    so any pool mutation must invalidate cached plans — re-planned on
+    the next window, never served stale."""
+    eng, cfg = engine_factory(batch=2)
+    assert eng.prefix_sharing
+    s = Scheduler(eng)
+    (req,) = _reqs(cfg, [8], max_new=2)
+    s.submit(req)
+    assert s.plan_ahead() == 1
+    eng.pool.version += 1                # what any alloc/free/register does
+    assert s.plan_ahead() == 1           # stale -> re-planned, not reused
+    s.drain()
+    assert s.stats.completed == 1
+
+
 def test_slo_miss_counted(engine_factory):
     eng, cfg = engine_factory(batch=1)
+    eng.clock = vc = VirtualClock(start=1000.0)
     s = Scheduler(eng, policy="fifo")        # fifo still tracks SLO stats
     (req,) = _reqs(cfg, [8], max_new=2)
-    req.deadline_s = time.perf_counter() + 1e-9    # unmeetable
+    req.deadline_s = vc.now() + 5.0
     s.submit(req)
+    vc.advance(10.0)                         # SLO lapses while in flight
     s.drain()
     assert s.stats.slo_misses == 1
     assert s.stats.slo_hits == 0

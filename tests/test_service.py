@@ -10,6 +10,7 @@ from repro.configs.base import get_config
 from repro.core.services import RequestError, ServiceError
 from repro.core.supervisor import Supervisor
 from repro.models.model import build_model
+from repro.serve.clock import VirtualClock
 from repro.serve.service import LMReplica, make_lm_service
 
 
@@ -69,16 +70,28 @@ def test_client_error_does_not_poison_balancer(stack):
 
 def test_lm_replica_shed_is_request_error(stack):
     """A request shed between admission and completion surfaces as
-    RequestError (not retryable, not an unpack crash)."""
+    RequestError (not retryable, not an unpack crash). Driven on the
+    virtual clock: a hog occupies the only slot, the victim's deadline
+    lapses while it waits in the scheduler queue, and the next fill()
+    sheds it at dequeue time."""
     cfg, model, params = stack
-    svc = make_lm_service("lm", model, params, n_replicas=1, batch_size=1,
-                          max_seq=64, policy="deadline")
+    svc = make_lm_service("lm_shed", model, params, n_replicas=1,
+                          batch_size=1, max_seq=64, policy="deadline")
     svc.start()
     rep = svc.replicas[0].handler
-    rep.scheduler.submit = lambda r: True    # force past admission
-    rep.scheduler.drain = lambda: []         # ...and simulate the shed
+    vc = VirtualClock(start=1000.0)
+    rep.scheduler.engine.clock = vc
+    rep.scheduler.clock = vc
+    rep.loop.clock = vc
+    hog = rep.submit({"prompt": [3, 4], "max_new_tokens": 8})
+    rep.loop.run_once()          # hog takes the only slot
+    doomed = rep.submit({"prompt": [5, 6, 7], "max_new_tokens": 2,
+                         "deadline_s": vc.now() + 1.0})
+    rep.loop.run_once()          # doomed queues behind the busy slot
+    vc.advance(5.0)              # deadline lapses while queued
     with pytest.raises(RequestError, match="shed"):
-        rep({"prompt": [3, 4, 5], "deadline_s": 1e12})
+        rep.loop.wait(doomed)
+    assert len(rep.loop.wait(hog)["tokens"]) == 8   # replica unharmed
 
 
 def test_lm_replica_queue_full_is_service_error(stack):

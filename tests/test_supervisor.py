@@ -4,6 +4,7 @@ import pytest
 
 from repro.core.services import Replica, Service, ServiceError
 from repro.core.supervisor import Supervisor
+from repro.serve.clock import VirtualClock
 
 
 def svc(name, priority, deps=()):
@@ -73,9 +74,13 @@ def test_flaky_start_retries():
                 raise RuntimeError("boom")
             super().start()
 
-    sup = Supervisor(max_restarts=5)
+    # restart backoff runs on an injected sleep: the virtual clock
+    # records each wait and advances instead of blocking the test
+    vc = VirtualClock()
+    sup = Supervisor(max_restarts=5, backoff_s=1.0, sleep=vc.sleep)
     sup.add(Flaky("flaky", replicas=[Replica("f/0", lambda p: p)],
                   priority=0))
     sup.start_all()
     assert attempts["n"] == 3
     assert sup.services["flaky"].started
+    assert vc.sleeps == [1.0, 2.0]       # linear backoff, zero wall-clock
