@@ -12,6 +12,38 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 
+def run_metadata() -> dict:
+    """Provenance stamp for a benchmark run: git SHA, library versions,
+    platform, and an ISO-8601 UTC timestamp — so a results.json in the
+    CI artifact trail identifies exactly what produced it. Every field
+    degrades to ``"unknown"`` rather than failing the run (e.g. a
+    tarball checkout with no .git)."""
+    import platform
+    import subprocess
+    from datetime import datetime, timezone
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — provenance must not fail the run
+        sha = "unknown"
+    versions = {}
+    for mod in ("jax", "jaxlib", "numpy"):
+        try:
+            versions[mod] = __import__(mod).__version__
+        except Exception:  # noqa: BLE001
+            versions[mod] = "unknown"
+    return {
+        "git_sha": sha,
+        "versions": versions,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+    }
+
+
 @dataclass
 class Report:
     verbose: bool = False
@@ -62,6 +94,7 @@ class Report:
         # (the perf trajectory lives in these JSONs, one per run)
         import json
         (path / "results.json").write_text(json.dumps({
+            "meta": run_metadata(),
             "rows": [{"name": n, "value": v, "unit": u, "derived": d}
                      for n, v, u, d in self.rows],
             "checks": [{"name": n, "ok": ok, "detail": d}

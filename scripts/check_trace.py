@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON produced by ``--trace-out``.
+
+Structural checks a Perfetto-loadable serve trace must pass:
+
+* top level is an object with a non-empty ``traceEvents`` list;
+* every event carries ``name``/``ph``/``pid``/``tid`` with a known
+  phase (``X`` complete, ``i`` instant, ``C`` counter, ``M``
+  metadata), non-metadata events a ``ts``, ``X`` events a non-negative
+  ``dur``, and counters a numeric ``args`` dict;
+* the process-naming metadata for the serve loop, request, and pool
+  tracks is present;
+* at least one full request lifecycle span (``request`` on a request
+  track) exists, and — when the trace has serve-loop events at all,
+  i.e. the run went through ``AsyncServeLoop`` (``--stream``) — at
+  least one tick-phase span. A synchronous ``drain()`` trace has no
+  loop track and is still valid.
+
+CI's trace-smoke step runs a tiny ``--trace-out`` serve and gates on
+this. Importable: ``validate(path)`` returns the error list.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PHASES = {"X", "i", "C", "M"}
+TICK_PHASES = {"apply-cancels", "fill", "dispatch", "plan-window",
+               "commit-wait", "emit"}
+PID_LOOP, PID_REQUESTS, PID_POOL = 0, 1, 2
+
+
+def validate(path: str | Path) -> list:
+    """Return a list of problems with the trace file; empty = valid."""
+    try:
+        trace = json.loads(Path(path).read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable trace: {e}"]
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        return ["top level must be an object with a traceEvents list"]
+    events = trace["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return ["traceEvents is empty — the run recorded nothing"]
+
+    errors = []
+    named_pids = set()
+    loop_events = 0
+    tick_spans = 0
+    lifecycle_spans = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        missing = [k for k in ("name", "ph", "pid", "tid")
+                   if k not in ev]
+        if missing:
+            errors.append(f"event {i} ({ev.get('name', '?')}): missing "
+                          f"keys {missing}")
+            continue
+        ph = ev["ph"]
+        if ph not in PHASES:
+            errors.append(f"event {i} ({ev['name']}): unknown phase "
+                          f"{ph!r}")
+            continue
+        if ph != "M" and "ts" not in ev:
+            errors.append(f"event {i} ({ev['name']}): missing ts")
+            continue
+        if ph == "M" and ev["name"] == "process_name":
+            named_pids.add(ev["pid"])
+        if ph != "M" and ev["pid"] == PID_LOOP:
+            loop_events += 1
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) \
+                    or ev["dur"] < 0:
+                errors.append(f"event {i} ({ev['name']}): complete span "
+                              f"needs a non-negative dur, got "
+                              f"{ev.get('dur')!r}")
+            if ev["pid"] == PID_LOOP and ev["name"] in TICK_PHASES:
+                tick_spans += 1
+            if ev["pid"] == PID_REQUESTS and ev["name"] == "request":
+                lifecycle_spans += 1
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) for v in args.values()):
+                errors.append(f"event {i} ({ev['name']}): counter needs "
+                              f"a numeric args dict, got {args!r}")
+
+    for pid, track in ((PID_LOOP, "serve-loop"),
+                       (PID_REQUESTS, "requests"), (PID_POOL, "kv-pool")):
+        if pid not in named_pids:
+            errors.append(f"no process_name metadata for the {track} "
+                          f"track (pid {pid})")
+    if loop_events and not tick_spans:
+        errors.append("serve-loop track has events but no tick-phase "
+                      f"spans (expected any of {sorted(TICK_PHASES)})")
+    if not lifecycle_spans:
+        errors.append("no completed request lifecycle span on the "
+                      "requests track")
+    return errors
+
+
+def main(argv: list) -> int:
+    if len(argv) != 2:
+        print("usage: check_trace.py TRACE_JSON", file=sys.stderr)
+        return 2
+    errors = validate(argv[1])
+    if errors:
+        print(f"{len(errors)} trace problem(s) in {argv[1]}:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n = len(json.loads(Path(argv[1]).read_text())["traceEvents"])
+    print(f"trace OK: {argv[1]} ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

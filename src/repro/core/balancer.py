@@ -51,6 +51,19 @@ class RoundRobinBalancer:
         self._state = {id(r): _ReplicaState() for r in replicas}
         self.stats = {"served": 0, "failovers": 0, "backup_served": 0}
 
+    # ----------------------------------------------------------- metrics
+    def metrics_snapshot(self) -> dict:
+        """Upstream counters plus current bench state, flat and numeric
+        — the shape ``MetricsRegistry.source`` polls, and what
+        ``Supervisor.snapshot``/``status`` surface per service."""
+        with self._lock:
+            now = self.clock()
+            return {**self.stats,
+                    "benched": sum(1 for st in self._state.values()
+                                   if st.benched_until > now),
+                    "primaries": len(self.primaries),
+                    "backups": len(self.backups)}
+
     # ----------------------------------------------------------- selection
     def _available(self, r: Replica) -> bool:
         return self._state[id(r)].benched_until <= self.clock()

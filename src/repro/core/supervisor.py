@@ -25,6 +25,11 @@ class Supervisor:
     # (VirtualClock.sleep records and advances instead of blocking)
     sleep: object = time.sleep
     events: list = field(default_factory=list)
+    # restart accounting, surfaced by snapshot(): per-service failed
+    # start attempts (across every _start call's retries), and the
+    # services that ever exhausted their max_restarts budget
+    restart_attempts: dict = field(default_factory=dict)
+    exhausted: set = field(default_factory=set)
 
     def add(self, svc: Service) -> Service:
         self.services[svc.name] = svc
@@ -59,8 +64,11 @@ class Supervisor:
                 return
             except Exception:  # noqa: BLE001 — supervisor retries anything
                 attempts += 1
+                self.restart_attempts[svc.name] = \
+                    self.restart_attempts.get(svc.name, 0) + 1
                 self.events.append(("start-failed", svc.name, attempts))
                 if attempts > self.max_restarts:
+                    self.exhausted.add(svc.name)
                     raise
                 if self.backoff_s:
                     self.sleep(self.backoff_s * attempts)
@@ -92,6 +100,46 @@ class Supervisor:
                 row["upstream"] = dict(s.balancer.stats)
             out[name] = row
         return out
+
+    def snapshot(self) -> dict:
+        """``status()`` enriched with restart accounting — per-service
+        failed start attempts and whether the restart budget was ever
+        exhausted — plus the supervisor-wide budget, so a fleet
+        dashboard sees flapping services before they die for good."""
+        out = self.status()
+        for name, row in out.items():
+            row["restart_attempts"] = self.restart_attempts.get(name, 0)
+            row["restarts_exhausted"] = name in self.exhausted
+            row["max_restarts"] = self.max_restarts
+        return out
+
+    def prometheus_text(self) -> str:
+        """One Prometheus exposition across every deployed service:
+        each LM replica's metrics registry (labelled per replica),
+        each balancer's upstream counters (labelled per service), and
+        the supervisor's own restart accounting — the fleet-level
+        scrape endpoint."""
+        from repro.serve.telemetry import MetricsRegistry, prometheus_text
+        regs = []
+        for name, s in self.services.items():
+            for r in s.replicas:
+                reg = getattr(r.handler, "registry", None)
+                if reg is not None:
+                    regs.append(reg)
+            bal = getattr(s, "balancer", None)
+            if bal is not None and hasattr(bal, "metrics_snapshot"):
+                breg = MetricsRegistry(labels={"service": name})
+                breg.source("balancer", bal.metrics_snapshot)
+                regs.append(breg)
+            sreg = MetricsRegistry(labels={"service": name})
+            sreg.source("supervisor", lambda n=name: {
+                "restart_attempts": self.restart_attempts.get(n, 0),
+                "restarts_exhausted":
+                    1 if n in self.exhausted else 0,
+                "max_restarts": self.max_restarts,
+                "up": 1 if self.services[n].started else 0})
+            regs.append(sreg)
+        return prometheus_text(regs)
 
     def unhealthy(self) -> list[str]:
         """Services with zero healthy replicas — restart candidates."""

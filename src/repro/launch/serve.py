@@ -44,7 +44,16 @@ def main() -> None:
                     help="serve through the async dispatch/plan-ahead/"
                          "commit loop with per-token streaming (reports "
                          "TTFT and host/device overlap)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request lifecycles, tick phases, and "
+                         "pool events to a Chrome trace-event JSON "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace_out:
+        from repro.serve.telemetry import Tracer
+        tracer = Tracer()
 
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
                               dtype=jax.numpy.float32)
@@ -53,7 +62,8 @@ def main() -> None:
     eng = ServingEngine(model, params, batch_size=args.batch,
                         max_seq=args.max_seq,
                         prefill_chunk=args.prefill_chunk,
-                        prefill_budget=args.prefill_budget)
+                        prefill_budget=args.prefill_budget,
+                        tracer=tracer)
 
     sched = Scheduler(eng, policy=args.policy,
                       prefill_budget=args.prefill_budget)
@@ -122,6 +132,10 @@ def main() -> None:
         print(f"  req {r.rid}: out={r.out_tokens}")
     assert len(done) + sched.stats.shed + sched.stats.rejected \
         == args.requests
+    if tracer is not None:
+        n = tracer.write_chrome_trace(args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out}"
+              + (f" ({tracer.dropped} dropped)" if tracer.dropped else ""))
     print("OK")
 
 

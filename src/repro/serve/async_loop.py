@@ -51,6 +51,7 @@ from collections import deque
 from repro.core.services import RequestError, ServiceError
 from repro.serve.engine import Request
 from repro.serve.scheduler import Scheduler
+from repro.serve.telemetry import PID_LOOP
 
 
 class StreamHandle:
@@ -226,24 +227,49 @@ class AsyncServeLoop:
     def run_once(self) -> bool:
         """One pipelined tick: admit/cancel → fill → dispatch →
         (plan-ahead window) → commit → account → emit → resolve.
-        Returns False when there was nothing to do."""
+        Returns False when there was nothing to do.
+
+        With a tracer on the engine, every phase lands on the trace's
+        serve-loop track as a span — the plan-window and commit-wait
+        spans measure the dispatch/commit overlap directly (host work
+        hidden vs. time blocked on the device). Timestamps come from
+        the loop's clock, so a VirtualClock-driven pump emits a
+        deterministic timeline."""
+        tr = self.engine.tracer
+        trace = tr.enabled
         with self._lock:
+            tp = self.clock() if trace else 0.0
             self._apply_cancels()
+            if trace:
+                now = self.clock()
+                tr.complete("apply-cancels", tp, now - tp, pid=PID_LOOP)
+                tp = now
             self._admit()
             self.scheduler.fill()
             self._collect_shed()
+            if trace:
+                now = self.clock()
+                tr.complete("fill", tp, now - tp, pid=PID_LOOP)
+                tp = now
             eng = self.engine
             if not (eng.active or eng.waiting or eng._finished_at_admit):
                 return False
             tick = eng.dispatch_step()
             # ---- overlap window: the device step is in flight --------
             t0 = self.clock()
+            if trace:
+                tr.complete("dispatch", tp, t0 - tp, pid=PID_LOOP,
+                            args={"active": eng.active})
             self._admit()               # late arrivals reach this plan
             planned = self.scheduler.plan_ahead(self.plan_limit)
             t1 = self.clock()
             # ----------------------------------------------------------
             done = tick.commit()
             t2 = self.clock()
+            if trace:
+                tr.complete("plan-window", t0, t1 - t0, pid=PID_LOOP,
+                            args={"planned": planned})
+                tr.complete("commit-wait", t1, t2 - t1, pid=PID_LOOP)
             self.scheduler.account(done)
             self.metrics["ticks"] += 1
             self.metrics["planned"] += planned
@@ -251,7 +277,11 @@ class AsyncServeLoop:
                 self.metrics["planned_ahead_ticks"] += 1
             self.metrics["plan_time_s"] += t1 - t0
             self.metrics["commit_wait_s"] += t2 - t1
+            tp = self.clock() if trace else 0.0
             self._emit()
+            if trace:
+                tr.complete("emit", tp, self.clock() - tp, pid=PID_LOOP,
+                            args={"finished": len(done)})
             for r in done:
                 handle = self._live.pop(r.rid, None)
                 if handle is not None and not handle.done:

@@ -51,6 +51,8 @@ rather than a silent cross-sequence KV corruption.
 """
 from __future__ import annotations
 
+from repro.serve.telemetry import NOOP, PID_POOL
+
 SCRATCH_BLOCK = 0
 
 
@@ -69,13 +71,17 @@ class BlockPool:
     memory is reused first.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *, tracer=None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is scratch)")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # event recorder (serve/telemetry.py): alloc/free/revive
+        # instants + an occupancy counter track, all guarded on
+        # .enabled so the untraced allocator stays allocation-free
+        self.tracer = NOOP if tracer is None else tracer
         # monotonic mutation stamp: bumped by every state change that
         # could alter a prefix match or an admission cost (alloc, free,
         # acquire, register, deregister). The scheduler's plan-ahead
@@ -156,6 +162,7 @@ class BlockPool:
         if n > len(self._free):
             return None
         got: list = []
+        evicted = 0
         # LIFO over unindexed blocks first: recently-touched memory is
         # reused AND resident cached prefixes survive as long as any
         # uncached block can serve the allocation
@@ -168,9 +175,13 @@ class BlockPool:
             b = self._free.pop(0)
             self.deregister(b)
             got.append(b)
+            evicted += 1
         for b in got:
             self._holders[b] = [owner]
         self.version += 1
+        if n and self.tracer.enabled:
+            self._trace("alloc", {"n": n, "owner": str(owner),
+                                  "cached_evicted": evicted})
         return got
 
     def acquire(self, block: int, owner) -> None:
@@ -188,12 +199,18 @@ class BlockPool:
                 self._free.remove(block)     # revive a cached prefix block
                 self._holders[block] = [owner]
                 self.version += 1
+                if self.tracer.enabled:
+                    self._trace("revive", {"block": int(block),
+                                           "owner": str(owner)})
                 return
             raise ValueError(f"block {block}: acquire of a free block")
         if owner in holders:
             raise ValueError(f"block {block}: {owner!r} already holds it")
         holders.append(owner)
         self.version += 1
+        if self.tracer.enabled:
+            self._trace("share", {"block": int(block),
+                                  "holders": len(holders)})
 
     def free(self, blocks: list, owner) -> None:
         """Drop ``owner``'s hold on each of ``blocks``; a block returns
@@ -203,6 +220,7 @@ class BlockPool:
         match and revive it (sequential sharing, not just overlapping
         arrivals). Double-free or a free of someone else's block fails
         loudly."""
+        released = 0
         for b in blocks:
             holders = self._holders.get(b)
             if holders is None:
@@ -214,7 +232,11 @@ class BlockPool:
             if not holders:
                 del self._holders[b]
                 self._free.append(b)
+                released += 1
         self.version += 1
+        if blocks and self.tracer.enabled:
+            self._trace("free", {"n": len(blocks), "released": released,
+                                 "owner": str(owner)})
 
     # ------------------------------------------------------- prefix index
     ROOT = None        # parent of a sequence's first block
@@ -320,6 +342,16 @@ class BlockPool:
                 blocks.append(b)
                 pos += len(tail)
         return blocks, pos
+
+    # ---------------------------------------------------------- telemetry
+    def _trace(self, name: str, args: dict) -> None:
+        """One pool mutation on the trace: the event itself plus an
+        occupancy counter sample, so Perfetto draws used/shared/cached
+        as a filled track alongside the request and tick spans."""
+        self.tracer.instant(name, pid=PID_POOL, args=args)
+        self.tracer.counter("pool", {"used": self.used,
+                                     "shared": self.shared,
+                                     "cached": self.cached}, pid=PID_POOL)
 
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:

@@ -110,6 +110,7 @@ from repro.serve import sampling
 from repro.serve.blocks import BlockPool
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.spec import DraftRunner
+from repro.serve.telemetry import NOOP, PID_LOOP, PID_POOL, PID_REQUESTS
 
 _MIN_BUCKET = 8
 # default chunk for chunked prefill (tokens per slot per chunk step):
@@ -138,6 +139,9 @@ class Request:
     submitted_s: float = field(default_factory=time.perf_counter)
     done_s: float | None = None
     preemptions: int = 0            # times evicted for recompute readmission
+    admitted_s: float | None = None     # first engine-slot admission
+    first_token_s: float | None = None  # first *generated* token commit
+    #                                 (TTFT = first_token_s - submitted_s)
 
     @property
     def latency_s(self) -> float:
@@ -187,7 +191,7 @@ class ServingEngine:
                  draft_params=None, speculation: int = 0,
                  prefill_chunk: int | None = None,
                  prefill_budget: int | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, tracer=None):
         self.model = model
         self.params = params
         self.B = batch_size
@@ -196,6 +200,12 @@ class ServingEngine:
         # injectable time source (completion stamps); a VirtualClock
         # here makes every latency/deadline observable deterministic
         self.clock = clock
+        # span/event recorder (serve/telemetry.py). The NOOP default
+        # keeps the hot path flat, and every emission site additionally
+        # guards on ``.enabled`` so an untraced engine never builds
+        # event payloads. Pass a Tracer sharing this clock for traces
+        # on the same timeline as the latency stamps.
+        self.tracer = NOOP if tracer is None else tracer
         cache_spec = jax.eval_shape(lambda: model.init_cache(1, _MIN_BUCKET))
         pure_attn = set(cache_spec) <= {"k", "v"}
         # MoE routing flattens the whole (rows x tokens) block into one
@@ -261,7 +271,7 @@ class ServingEngine:
                                  "(expert-capacity caveat, docs/serving.md)")
             self.draft = DraftRunner(draft_model, draft_params,
                                      batch_size=batch_size, max_seq=max_seq,
-                                     plan=plan)
+                                     plan=plan, tracer=self.tracer)
         else:
             self.draft = None
         self.slot_len = np.zeros(batch_size, np.int32)   # tokens in cache
@@ -289,7 +299,8 @@ class ServingEngine:
             if num_blocks is None:
                 # parity default: same token capacity as B fixed stripes
                 num_blocks = batch_size * self.blocks_per_slot + 1  # + scratch
-            self.pool = BlockPool(num_blocks, block_size)
+            self.pool = BlockPool(num_blocks, block_size,
+                                  tracer=self.tracer)
             self.reserve_blocks = min(reserve_blocks, max(self.pool.total - 1,
                                                           0))
             self.caches = model.init_paged_cache(num_blocks, block_size)
@@ -463,6 +474,54 @@ class ServingEngine:
                         "spec_blocks_rolled_back": 0,
                         "chunked_admissions": 0, "chunk_steps": 0,
                         "chunk_prefill_tokens": 0, "cancelled": 0}
+
+    # ---------------------------------------------------------- telemetry
+    def _trace_admit(self, req: Request, slot: int, *,
+                     shared: bool = False, chunked: bool = False) -> None:
+        """Stamp the admission (first one only: a preempted request's
+        re-admission keeps the original, so its prefill span covers the
+        recompute) and mark it on the request's trace track."""
+        if req.admitted_s is None:
+            req.admitted_s = self.clock()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "admitted", pid=PID_REQUESTS, tid=req.rid,
+                args={"slot": slot, "shared": shared, "chunked": chunked,
+                      "readmission": req.preemptions > 0})
+
+    def _note_first_token(self, req: Request) -> None:
+        """Stamp the request's first *generated* token the moment it
+        commits — TTFT is ``first_token_s - submitted_s``, the value the
+        trace's first-token instant must reconstruct exactly."""
+        if req.first_token_s is not None:
+            return
+        req.first_token_s = self.clock()
+        if self.tracer.enabled:
+            self.tracer.instant("first_token", pid=PID_REQUESTS,
+                                tid=req.rid, ts=req.first_token_s)
+
+    def _trace_retire(self, req: Request, status: str) -> None:
+        """Render the finished request's lifecycle as spans on its trace
+        track: the whole-request span plus prefill (admitted -> first
+        token) and decode (first token -> done) phases where they
+        happened. Emitted at retire time from the request's own stamps,
+        so the spans agree with the engine's reported latencies by
+        construction."""
+        tr = self.tracer
+        tr.complete("request", req.submitted_s,
+                    req.done_s - req.submitted_s, pid=PID_REQUESTS,
+                    tid=req.rid,
+                    args={"status": status, "tokens": len(req.out_tokens),
+                          "preemptions": req.preemptions})
+        if req.first_token_s is None:
+            return
+        if req.admitted_s is not None:
+            tr.complete("prefill", req.admitted_s,
+                        req.first_token_s - req.admitted_s,
+                        pid=PID_REQUESTS, tid=req.rid)
+        tr.complete("decode", req.first_token_s,
+                    req.done_s - req.first_token_s,
+                    pid=PID_REQUESTS, tid=req.rid)
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> list:
@@ -784,6 +843,8 @@ class ServingEngine:
                 # re-prefilled — finish it as capacity-truncated
                 r.done_s = self.clock()
                 self.metrics["completed"] += 1
+                if self.tracer.enabled:
+                    self._trace_retire(r, "truncated")
                 self._finished_at_admit.append(r)
                 self._waiting.remove(r)
                 continue
@@ -899,6 +960,7 @@ class ServingEngine:
                 self.slot_pending[slot] = list(eff[n0:])
                 self._admit_seq += 1
                 self._admit_order[slot] = self._admit_seq
+                self._trace_admit(req, slot, chunked=n0 < P)
                 self.metrics["prefills"] += 1
                 self.metrics["prefill_tokens_computed"] += P
                 if n0 < P:
@@ -909,6 +971,7 @@ class ServingEngine:
                     continue
                 req.out_tokens.append(int(nxt[j]))
                 req.out_logprobs.append(float(logp[j]))
+                self._note_first_token(req)
                 if self._is_done(req):
                     self._retire(slot)
                     self._finished_at_admit.append(req)
@@ -1010,6 +1073,7 @@ class ServingEngine:
             else:
                 req.out_tokens.append(int(np.asarray(nxt)[0]))
                 req.out_logprobs.append(float(np.asarray(logp)[0]))
+                self._note_first_token(req)
         else:
             self.slot_blocks[slot] = list(blocks)
             self.block_table[slot, :] = 0
@@ -1034,6 +1098,8 @@ class ServingEngine:
         self._used_slots.add(slot)
         self._admit_seq += 1
         self._admit_order[slot] = self._admit_seq
+        self._trace_admit(req, slot, shared=m >= self.block_size,
+                          chunked=bool(self.slot_pending[slot]))
         self.metrics["prefills"] += 1
         if self._is_done(req):
             self._retire(slot)
@@ -1134,6 +1200,9 @@ class ServingEngine:
     def _retire(self, slot: int, *, cancelled: bool = False) -> None:
         req = self.slot_req[slot]
         req.done_s = self.clock()
+        if self.tracer.enabled:
+            self._trace_retire(req,
+                               "cancelled" if cancelled else "completed")
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.slot_pending[slot] = []
@@ -1166,6 +1235,8 @@ class ServingEngine:
             if r.rid == rid:
                 self._waiting.remove(r)
                 r.done_s = self.clock()
+                if self.tracer.enabled:
+                    self._trace_retire(r, "cancelled")
                 self.metrics["cancelled"] += 1
                 return True
         return False
@@ -1189,6 +1260,10 @@ class ServingEngine:
             self.draft.reset(slot)
         self._waiting.append(req)
         self.metrics["preemptions"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", pid=PID_REQUESTS, tid=req.rid,
+                                args={"slot": slot,
+                                      "generated": len(req.out_tokens)})
 
     def _ensure_writable(self, i: int, width: int) -> int:
         """Make positions ``[len, len + width)`` of slot ``i`` safe to
@@ -1218,12 +1293,20 @@ class ServingEngine:
                     # the copy, or sole ownership, arrives)
                     self.block_table[i, first_bi] = 0
                     self.metrics["cow_parks"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant("cow_park", pid=PID_POOL,
+                                            args={"slot": i,
+                                                  "block": int(b)})
                     return 0
                 self.caches = self._copy_block(self.caches, np.int32(b),
                                                np.int32(got[0]))
                 self.pool.free([b], owner=i)
                 self.slot_blocks[i][first_bi] = got[0]
                 self.metrics["cow_copies"] += 1
+                if self.tracer.enabled:
+                    self.tracer.instant("cow_copy", pid=PID_POOL,
+                                        args={"slot": i, "src": int(b),
+                                              "dst": int(got[0])})
                 b = got[0]
             self.block_table[i, first_bi] = b    # also restores a CoW park
             self.pool.prepare_write(b, L % bs)
@@ -1280,6 +1363,11 @@ class ServingEngine:
                 self._finished_at_admit.append(self.slot_req[i])
                 self._retire(i)
         self.metrics["parked_slot_steps"] += len(parked)
+        if parked and self.tracer.enabled:
+            for i in parked:
+                self.tracer.instant("park", pid=PID_REQUESTS,
+                                    tid=self.slot_req[i].rid,
+                                    args={"slot": i})
         return secured
 
     def _rollback(self, i: int) -> None:
@@ -1353,6 +1441,7 @@ class ServingEngine:
         a, out_toks, lps = np.asarray(a), np.asarray(out_toks), \
             np.asarray(lps)
         k = self.spec_k
+        win_proposed = win_accepted = 0     # this verify window's totals
         for i in active:
             r = self.slot_req[i]
             if self.slot_pending[i]:
@@ -1377,6 +1466,8 @@ class ServingEngine:
                 if n_spec[i] > 0:
                     self.metrics["spec_proposed"] += int(n_spec[i])
                     self.metrics["spec_accepted"] += ai
+                    win_proposed += int(n_spec[i])
+                    win_accepted += ai
                     # draft cache valid through the accepted prefix; it
                     # only ever cached through proposal k-1
                     self.draft.commit(i, int(totals[i]) + min(ai, k - 1))
@@ -1390,9 +1481,17 @@ class ServingEngine:
                     break
             r.out_tokens.extend(commit)
             r.out_logprobs.extend(lpc[:len(commit)])
+            if commit:
+                self._note_first_token(r)
             if self._is_done(r):
                 finished.append(r)
                 self._retire(i)
+        if win_proposed and self.tracer.enabled:
+            # per-window acceptance: Perfetto renders these as stacked
+            # counter series next to the tick-phase track
+            self.tracer.counter("speculation",
+                                {"proposed": win_proposed,
+                                 "accepted": win_accepted}, pid=PID_LOOP)
         return finished
 
     def _chunk_step(self, active: list, chunk_want: dict,
@@ -1456,6 +1555,7 @@ class ServingEngine:
                     continue
             r.out_tokens.append(int(nxt[i]))
             r.out_logprobs.append(float(logp[i]))
+            self._note_first_token(r)
             if self._is_done(r):
                 finished.append(r)
                 self._retire(i)
@@ -1590,6 +1690,7 @@ class ServingEngine:
                     continue
             r.out_tokens.append(int(nxt[i]))
             r.out_logprobs.append(float(logp[i]))
+            self._note_first_token(r)
             if self._is_done(r):
                 finished.append(r)
                 self._retire(i)

@@ -56,10 +56,12 @@ protect, and an over-budget prompt must not livelock).
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.telemetry import PID_REQUESTS
 
 POLICIES = ("fifo", "spf", "priority", "deadline")
 
@@ -81,10 +83,18 @@ class SchedulerStats:
     completed_by_priority: dict = field(default_factory=dict)
 
     def percentile(self, q: float) -> float:
+        """Nearest-rank percentile: the smallest sample such that at
+        least ``q`` of the data is <= it (rank ``ceil(q * n)``,
+        1-indexed, clamped to [1, n]). The old ``int(q * n)`` index sat
+        one past the rank whenever ``q * n`` landed on an integer — p50
+        of 10 samples read the 6th, and any q >= (n-1)/n read the max —
+        biasing every small-sample percentile high (the bench TTFT-p99
+        gates read this)."""
         if not self.latencies_s:
             return 0.0
         xs = sorted(self.latencies_s)
-        return xs[min(int(q * len(xs)), len(xs) - 1)]
+        rank = max(1, min(math.ceil(q * len(xs)), len(xs)))
+        return xs[rank - 1]
 
     def mean_queue_wait_s(self) -> float:
         if not self.queue_wait_s:
@@ -110,8 +120,11 @@ class Scheduler:
         # admissions); None = unbudgeted
         self.prefill_budget = prefill_budget
         # shares the engine's clock by default so deadlines, queue waits,
-        # and engine latency stamps live on one timeline (virtual in tests)
+        # and engine latency stamps live on one timeline (virtual in
+        # tests) — and the engine's tracer, so queue spans land in the
+        # same trace as the lifecycle spans the engine emits
         self.clock = clock if clock is not None else engine.clock
+        self.tracer = engine.tracer
         self.queue: deque = deque()
         self.stats = SchedulerStats()
         self._enq_t: dict[int, float] = {}
@@ -139,6 +152,10 @@ class Scheduler:
             return False
         self.queue.append(req)
         self._enq_t[req.rid] = self.clock()
+        if self.tracer.enabled:
+            self.tracer.instant("submit", pid=PID_REQUESTS, tid=req.rid,
+                                ts=self._enq_t[req.rid],
+                                args={"queue_depth": len(self.queue)})
         self.stats.admitted += 1
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
         return True
@@ -166,6 +183,9 @@ class Scheduler:
         self._enq_t.pop(req.rid, None)
         self._plan.pop(req.rid, None)
         self.stats.shed += 1
+        if self.tracer.enabled:
+            self.tracer.instant("shed", pid=PID_REQUESTS, tid=req.rid,
+                                ts=req.done_s)
         self.shed_requests.append(req)
 
     def _shed_index(self) -> int:
@@ -239,7 +259,14 @@ class Scheduler:
         hit = self._plan.pop(req.rid, None)
         if hit is not None and hit[0] == self._pool_version():
             self.stats.plan_hits += 1
+            if self.tracer.enabled:
+                self.tracer.instant("plan_hit", pid=PID_REQUESTS,
+                                    tid=req.rid)
             return hit[1]
+        if self.tracer.enabled:
+            self.tracer.instant("plan_miss", pid=PID_REQUESTS,
+                                tid=req.rid,
+                                args={"stale": hit is not None})
         return self.engine.admission_costs(req)
 
     # ------------------------------------------------------------- cancel
@@ -309,7 +336,13 @@ class Scheduler:
                 self.queue.appendleft(req)
             now = self.clock()
             for req in batch[:admitted]:
-                self.stats.queue_wait_s.append(now - self._enq_t.pop(req.rid))
+                t_enq = self._enq_t.pop(req.rid)
+                self.stats.queue_wait_s.append(now - t_enq)
+                if self.tracer.enabled:
+                    # same endpoints as the queue_wait_s stat, so the
+                    # trace's queued span IS the reported queue wait
+                    self.tracer.complete("queued", t_enq, now - t_enq,
+                                         pid=PID_REQUESTS, tid=req.rid)
 
     def account(self, done: list) -> list:
         """Stats half of a tick: latency/SLO bookkeeping for the finished

@@ -27,6 +27,7 @@ from repro.serve.async_loop import AsyncServeLoop
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.scheduler import Scheduler
+from repro.serve.telemetry import MetricsRegistry, prometheus_text
 
 
 @dataclass
@@ -47,9 +48,37 @@ class LMReplica:
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
     loop: AsyncServeLoop = field(init=False, repr=False)
+    registry: MetricsRegistry = field(init=False, repr=False)
 
     def __post_init__(self):
         self.loop = AsyncServeLoop(self.scheduler, name=self.name)
+        # one metrics namespace per replica, labelled by replica name so
+        # expositions from many replicas merge without collisions. The
+        # engine/pool/scheduler/loop stats dicts stay the single source
+        # of truth — the registry polls them at collection time.
+        eng = self.scheduler.engine
+        self.registry = MetricsRegistry(labels={"replica": self.name})
+        self.registry.source("engine", lambda: eng.metrics)
+        self.registry.source("pool", eng.pool_stats)
+        self.registry.source("loop", lambda: self.loop.metrics)
+        self.registry.source("scheduler", self._scheduler_metrics)
+
+    def _scheduler_metrics(self) -> dict:
+        st = self.scheduler.stats
+        return {"admitted": st.admitted, "completed": st.completed,
+                "rejected": st.rejected, "shed": st.shed,
+                "ticks": st.ticks, "queue_peak": st.queue_peak,
+                "queue_depth": len(self.scheduler.queue),
+                "slo_hits": st.slo_hits, "slo_misses": st.slo_misses,
+                "planned_ahead": st.planned_ahead,
+                "plan_hits": st.plan_hits,
+                "latency_p50_s": st.percentile(0.50),
+                "latency_p99_s": st.percentile(0.99),
+                "queue_wait_mean_s": st.mean_queue_wait_s()}
+
+    def prometheus_text(self) -> str:
+        """This replica's metrics as one Prometheus text exposition."""
+        return self.registry.prometheus_text()
 
     def load(self) -> int:
         return self.loop.load()
@@ -154,7 +183,8 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                     use_kernel: bool = False, draft_model=None,
                     draft_params=None, speculation: int = 0,
                     prefill_chunk: int | None = None,
-                    prefill_budget: int | None = None) -> Service:
+                    prefill_budget: int | None = None,
+                    tracer=None) -> Service:
     """Build an LM PaaS: engine replicas -> Replica -> Service -> balancer,
     optionally registered with a Supervisor (started in priority order).
 
@@ -177,7 +207,11 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
     payload key) and ``prefill_budget`` arms the per-tick prefill token
     budget on both the engine's chunk steps and the scheduler's
     admission fill — non-positive values raise a client
-    :class:`RequestError` at the payload, ``ValueError`` here."""
+    :class:`RequestError` at the payload, ``ValueError`` here.
+    ``tracer`` (a :class:`~repro.serve.telemetry.Tracer`) records every
+    replica's request lifecycles and tick phases into ONE trace; each
+    replica also exposes a labelled metrics registry regardless
+    (``service_prometheus_text`` merges them)."""
     replicas = []
     for i in range(n_replicas):
         eng = ServingEngine(model, params, batch_size=batch_size,
@@ -188,7 +222,8 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
                             draft_params=draft_params,
                             speculation=speculation,
                             prefill_chunk=prefill_chunk,
-                            prefill_budget=prefill_budget)
+                            prefill_budget=prefill_budget,
+                            tracer=tracer)
         sched = Scheduler(eng, policy=policy, max_queue=max_queue,
                           pressure_shed=pressure_shed,
                           prefill_budget=prefill_budget)
@@ -202,3 +237,19 @@ def make_lm_service(name: str, model, params, *, n_replicas: int = 1,
     if supervisor is not None:
         supervisor.add(svc)
     return svc
+
+
+def service_prometheus_text(svc: Service) -> str:
+    """One Prometheus text exposition for the whole service: every
+    replica's registry (labelled per replica) merged with the
+    balancer's upstream counters (labelled per service) — the scrape
+    endpoint a deployment would mount next to the paper's NGINX
+    front door."""
+    regs = [r.handler.registry for r in svc.replicas
+            if hasattr(r.handler, "registry")]
+    bal = getattr(svc, "balancer", None)
+    if bal is not None and hasattr(bal, "metrics_snapshot"):
+        breg = MetricsRegistry(labels={"service": svc.name})
+        breg.source("balancer", bal.metrics_snapshot)
+        regs.append(breg)
+    return prometheus_text(regs)

@@ -34,18 +34,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import sampling
+from repro.serve.telemetry import NOOP, PID_LOOP
 
 _MIN_BUCKET = 8     # matches the engine's smallest prefill bucket
 
 
 class DraftRunner:
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
-                 plan=None):
+                 plan=None, tracer=None):
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.plan = plan
+        # shared with the owning engine: proposal rounds land on the
+        # same serve-loop trace track as the tick phases
+        self.tracer = NOOP if tracer is None else tracer
         cache_spec = jax.eval_shape(lambda: model.init_cache(1, _MIN_BUCKET))
         if not set(cache_spec) <= {"k", "v"}:
             # the runner's whole rollback story is stripe semantics:
@@ -187,6 +191,10 @@ class DraftRunner:
                 proposed[i, t] = nxt[i]
                 last[i] = nxt[i]
         self.steps_run += k
+        if self.tracer.enabled:
+            self.tracer.instant("draft_propose", pid=PID_LOOP,
+                                args={"rows": len(rows), "k": k,
+                                      "catchup_tokens": int(pre)})
         draft_probs = jnp.stack(probs_steps, axis=1)        # (B, k, V)
         return proposed, draft_probs
 

@@ -340,3 +340,44 @@ def test_slo_miss_counted(engine_factory):
     s.drain()
     assert s.stats.slo_misses == 1
     assert s.stats.slo_hits == 0
+
+
+# ------------------------------------------------ percentile (nearest-rank)
+def test_percentile_empty_is_zero():
+    from repro.serve.scheduler import SchedulerStats
+    assert SchedulerStats().percentile(0.5) == 0.0
+
+
+def test_percentile_single_sample_any_q():
+    from repro.serve.scheduler import SchedulerStats
+    st = SchedulerStats(latencies_s=[0.42])
+    for q in (0.01, 0.5, 0.99, 1.0):
+        assert st.percentile(q) == 0.42
+
+
+def test_percentile_nearest_rank_even_n():
+    from repro.serve.scheduler import SchedulerStats
+    # 10 samples: p50 is the 5th smallest (ceil(0.5*10)=5). The old
+    # int(q*n) index read the 6th — one past the rank.
+    st = SchedulerStats(latencies_s=[float(i) for i in range(10, 0, -1)])
+    assert st.percentile(0.50) == 5.0
+    assert st.percentile(0.90) == 9.0     # ceil(9.0) = 9 -> 9th smallest
+    assert st.percentile(0.99) == 10.0    # ceil(9.9) = 10 -> max
+
+
+def test_percentile_small_sample_not_biased_to_max():
+    from repro.serve.scheduler import SchedulerStats
+    # 4 samples: the old index hit the max for every q >= 0.75; the
+    # nearest rank for p75 is the 3rd smallest
+    st = SchedulerStats(latencies_s=[4.0, 1.0, 3.0, 2.0])
+    assert st.percentile(0.75) == 3.0
+    assert st.percentile(0.76) == 4.0     # ceil(3.04) = 4 -> max
+    assert st.percentile(0.25) == 1.0
+    assert st.percentile(1.0) == 4.0
+
+
+def test_percentile_tiny_q_clamps_to_min():
+    from repro.serve.scheduler import SchedulerStats
+    st = SchedulerStats(latencies_s=[2.0, 1.0, 3.0])
+    assert st.percentile(0.0) == 1.0      # rank clamps to 1, not 0
+    assert st.percentile(1e-9) == 1.0

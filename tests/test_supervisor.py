@@ -84,3 +84,70 @@ def test_flaky_start_retries():
     assert attempts["n"] == 3
     assert sup.services["flaky"].started
     assert vc.sleeps == [1.0, 2.0]       # linear backoff, zero wall-clock
+
+
+# ------------------------------------------------- restart accounting
+def test_snapshot_counts_restart_attempts():
+    attempts = {"n": 0}
+
+    class Flaky(Service):
+        def start(self):
+            attempts["n"] += 1
+            if attempts["n"] < 3:
+                raise RuntimeError("boom")
+            super().start()
+
+    sup = Supervisor(max_restarts=5)
+    sup.add(Flaky("flaky", replicas=[Replica("f/0", lambda p: p)],
+                  priority=0))
+    sup.add(svc("steady", 1))
+    sup.start_all()
+    snap = sup.snapshot()
+    assert snap["flaky"]["restart_attempts"] == 2      # two failed starts
+    assert snap["flaky"]["restarts_exhausted"] is False
+    assert snap["flaky"]["max_restarts"] == 5
+    assert snap["flaky"]["state"] == "RUNNING"
+    assert snap["steady"]["restart_attempts"] == 0
+    # snapshot keeps everything status() reports
+    assert snap["steady"]["priority"] == 1
+    assert "replicas" in snap["steady"]
+
+
+def test_snapshot_marks_exhausted_restart_budget():
+    class Dead(Service):
+        def start(self):
+            raise RuntimeError("always down")
+
+    sup = Supervisor(max_restarts=2)
+    sup.add(Dead("dead", replicas=[Replica("d/0", lambda p: p)],
+                 priority=0))
+    with pytest.raises(RuntimeError, match="always down"):
+        sup.start_all()
+    snap = sup.snapshot()
+    # max_restarts=2 allows 3 start attempts before giving up
+    assert snap["dead"]["restart_attempts"] == 3
+    assert snap["dead"]["restarts_exhausted"] is True
+    assert snap["dead"]["state"] == "STOPPED"
+
+
+def test_restart_attempts_accumulate_across_restarts():
+    fail_next = {"on": False}
+
+    class Sometimes(Service):
+        def start(self):
+            if fail_next["on"]:
+                fail_next["on"] = False
+                raise RuntimeError("hiccup")
+            super().start()
+
+    sup = Supervisor(max_restarts=3)
+    sup.add(Sometimes("svc", replicas=[Replica("s/0", lambda p: p)],
+                      priority=0))
+    sup.start_all()
+    assert sup.snapshot()["svc"]["restart_attempts"] == 0
+    fail_next["on"] = True
+    sup.restart("svc")                   # one failure, then recovers
+    snap = sup.snapshot()
+    assert snap["svc"]["restart_attempts"] == 1
+    assert snap["svc"]["state"] == "RUNNING"
+    assert snap["svc"]["restarts_exhausted"] is False
