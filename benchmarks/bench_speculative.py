@@ -141,6 +141,36 @@ def run(report) -> None:
     report.row("speculative.total_tokens", base_tokens, "tokens",
                "per scenario, streams all identical")
 
+    # fused verify kernel (interpret mode off-TPU): the same workload
+    # with every verify window in ONE Pallas launch. Stream identity
+    # against the non-speculative baseline is the self-check, and the
+    # dispatch counters prove the fused path actually ran.
+    keng = ServingEngine(model, params, batch_size=B, max_seq=MAX_SEQ,
+                         paged=True, block_size=8, use_kernel=True,
+                         draft_model=model, draft_params=params,
+                         speculation=2)
+    kreqs = _reqs(cfg)
+    kwall = _serve(keng, kreqs)
+    km = keng.metrics
+    report.row("speculative.kernel.k2.wall_s", round(kwall, 3), "s",
+               "fused verify kernel, self draft")
+    report.row("speculative.kernel.k2.kernel_windows",
+               km["kernel_windows"], "launches",
+               "one fused launch per verify tick")
+    report.row("speculative.kernel.k2.kernel_positions",
+               km["kernel_positions"], "positions",
+               "real query positions through the paged kernel")
+    report.check("greedy stream identical under fused verify kernel",
+                 all(a.out_tokens == b.out_tokens
+                     for a, b in zip(base_reqs, kreqs)),
+                 f"{len(kreqs)} streams compared")
+    report.check("fused verify kernel dispatched multi-token windows",
+                 km["kernel_windows"] > 0
+                 and km["kernel_positions"] > km["kernel_windows"],
+                 f"{km['kernel_windows']} windows, "
+                 f"{km['kernel_positions']} positions")
+    assert keng.pool.available == keng.pool.total
+
 
 if __name__ == "__main__":
     from benchmarks.report import Report

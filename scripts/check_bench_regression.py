@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""CI bench-regression gate: current results.json vs committed baseline.
+
+    python scripts/check_bench_regression.py \
+        experiments/bench-smoke/results.json \
+        [--baseline benchmarks/baselines/ci_baseline.json] [--update]
+
+Only **deterministic** rows are gated — step counts, prefill tokens
+computed/shared, steady-state pool blocks, concurrency at equal KV
+memory, scheduler-tick TTFT. They are exact functions of the engine's
+admission/eviction/chunking logic on the fixed bench-smoke scenario
+set, so any drift is a real behaviour change: the gate fails CI when a
+metric moves in the *worse* direction and prints a loud notice (without
+failing) when it moves in the better direction, so an improvement is a
+deliberate baseline update, never an invisible ratchet.
+
+Wall-clock rows (ms / us_per_call / ns / %) are runner-dependent noise
+on shared CI hardware: they are reported as a trajectory table for the
+artifact trail and never gated.
+
+``--update`` rewrites the baseline from the current results (commit the
+diff — that IS the ratchet step).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = REPO / "benchmarks" / "baselines" / "ci_baseline.json"
+
+# Units that mark a row as wall-clock (trajectory only, never gated).
+WALL_UNITS = {"ms", "us_per_call", "ns", "s", "%"}
+
+# name -> direction the metric is allowed to move:
+#   "le": current must be <= baseline (lower is better / bounded)
+#   "ge": current must be >= baseline (higher is better)
+#   "eq": scenario constant — any drift means the bench itself changed
+GATES = {
+    "paged_kv.kv_token_capacity": "eq",
+    "paged_kv.max_concurrent.fixed_stripe": "eq",
+    "paged_kv.max_concurrent.paged": "ge",
+    "paged_kv.concurrency_ratio": "ge",
+    "paged_kv.steps_to_drain.fixed_stripe": "eq",
+    "paged_kv.steps_to_drain.paged": "le",
+    "paged_kv.pool_occupancy_after_drain": "eq",
+    "paged_kv.shared_prefix.requests": "eq",
+    "paged_kv.shared_prefix.prefill_tokens.unshared": "eq",
+    "paged_kv.shared_prefix.prefill_tokens.shared": "le",
+    "paged_kv.shared_prefix.steady_state_blocks.unshared": "eq",
+    "paged_kv.shared_prefix.steady_state_blocks.shared": "le",
+    "paged_kv.shared_prefix.tokens_reused": "ge",
+    "paged_kv.shared_prefix.prefill_reduction": "ge",
+    "serving.chunked.monolithic.max_event_prefill_tokens": "eq",
+    "serving.chunked.chunked.max_event_prefill_tokens": "le",
+    "serving.chunked.monolithic.events": "eq",
+    "serving.chunked.chunked.events": "le",
+    "serving.open_loop.ttft_p50": "le",
+    "serving.open_loop.ttft_p99": "le",
+    "serving.open_loop.ticks": "le",
+}
+
+
+def _rows(doc: dict) -> dict:
+    out = {}
+    for r in doc.get("rows", []):
+        try:
+            out[r["name"]] = (float(r["value"]), r.get("unit", ""))
+        except (TypeError, ValueError):
+            continue            # non-numeric rows carry no gate
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", type=Path,
+                    help="results.json from the current bench run")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current results")
+    args = ap.parse_args()
+
+    cur_doc = json.loads(args.results.read_text())
+    if args.update:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        args.baseline.write_text(json.dumps(cur_doc, indent=2,
+                                            default=str) + "\n")
+        print(f"baseline updated from {args.results} -> {args.baseline}")
+        return 0
+
+    base_doc = json.loads(args.baseline.read_text())
+    cur, base = _rows(cur_doc), _rows(base_doc)
+
+    failures, improvements, gated = [], [], 0
+    for name, direction in GATES.items():
+        if name not in base:
+            continue            # baseline predates this metric: un-gated
+        if name not in cur:
+            failures.append(f"{name}: gated metric missing from current "
+                            f"run (baseline {base[name][0]:g})")
+            continue
+        c, b = cur[name][0], base[name][0]
+        gated += 1
+        worse = (direction == "eq" and c != b) \
+            or (direction == "le" and c > b) \
+            or (direction == "ge" and c < b)
+        better = not worse and c != b
+        tag = f"{name}: current {c:g} vs baseline {b:g} [{direction}]"
+        if worse:
+            failures.append(tag)
+        elif better:
+            improvements.append(tag)
+
+    base_sha = str(base_doc.get("meta", {}).get("git_sha", "?"))[:10]
+    print(f"gated {gated} deterministic metrics against "
+          f"{args.baseline.name} (baseline sha {base_sha})")
+
+    # wall-clock trajectory: informational only
+    wall = [(n, cur[n][0], base[n][0]) for n in sorted(cur)
+            if n in base and cur[n][1] in WALL_UNITS]
+    if wall:
+        print("\nwall-clock trajectory (informational, not gated):")
+        for n, c, b in wall:
+            delta = (c / b - 1) * 100 if b else float("inf")
+            print(f"  {n}: {c:g} (baseline {b:g}, {delta:+.1f}%)")
+
+    if improvements:
+        print("\nimproved beyond baseline — consider ratcheting with "
+              "--update and committing the diff:")
+        for line in improvements:
+            print(f"  {line}")
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("\nno deterministic regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

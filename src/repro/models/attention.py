@@ -200,10 +200,14 @@ def paged_verify_attention(q, pool_k, pool_v, k_new, v_new, block_table,
     masked out of every output the caller commits (acceptance is capped
     at n_spec). Returns (out (B, S, Hq*hd), new_pool_k, new_pool_v).
 
-    ``use_kernel`` replays the single-token Pallas kernel once per
-    window position (the pool is scattered first, each call masks to
-    ``len + j + 1``), keeping the in-place read property; the jnp path
-    gathers once and masks causally inside the window.
+    ``use_kernel`` runs the **fused multi-token Pallas kernel**
+    (``kernels.paged_attention.paged_window_attention``): ONE launch
+    covers the whole (q_len, kv_len) window — every window query of
+    every row rides the same grid step, masked causally *inside* the
+    window (query j of row b sees cache positions <= cache_len[b] + j,
+    its per-row base length) — with the pool still read in place
+    through the scalar-prefetched block table. The jnp path gathers
+    once and applies the same causal-in-window mask.
     """
     from repro.serve.blocks import SCRATCH_BLOCK
     bs = pool_k.shape[1]
@@ -220,13 +224,10 @@ def paged_verify_attention(q, pool_k, pool_v, k_new, v_new, block_table,
     max_blocks = block_table.shape[1]
     if use_kernel:
         from repro.kernels.paged_attention.ops import (
-            paged_decode_attention as _paged_kernel)
-        outs = []
-        for j in range(S):
-            o, _ = _paged_kernel(q[:, j], pool_k, pool_v, block_table,
-                                 base + j + 1, sliding_window=sliding_window)
-            outs.append(o.reshape(B, -1))
-        return jnp.stack(outs, axis=1), pool_k, pool_v
+            paged_window_attention as _window_kernel)
+        out, _ = _window_kernel(q, pool_k, pool_v, block_table, base,
+                                sliding_window=sliding_window)
+        return out.reshape(B, S, -1), pool_k, pool_v
     gk = pool_k[block_table].reshape(B, max_blocks * bs, *pool_k.shape[2:])
     gv = pool_v[block_table].reshape(B, max_blocks * bs, *pool_v.shape[2:])
     out = verify_decode_attention(q, gk, gv, base,
@@ -257,10 +258,13 @@ def paged_decode_attention(q, pool_k, pool_v, k_new, v_new, block_table,
       stream — is unchanged.
     * **True (Pallas kernel)** — ``kernels.paged_attention`` reads K/V
       through the block table *in place* (scalar-prefetched table drives
-      the BlockSpec index maps); no transient gather. Compiled on TPU,
-      interpret mode elsewhere; held bit-exact (f32) against its
-      streaming jnp oracle by the differential grid in
-      ``tests/test_kernels.py``.
+      the BlockSpec index maps); no transient gather. This is the
+      q_len = 1 **degenerate case of the fused window kernel** that
+      also serves speculative verify and chunked prefill (see
+      ``paged_verify_attention``) — one kernel body behind every paged
+      consumer. Compiled on TPU, interpret mode elsewhere; held
+      bit-exact (f32) against its streaming jnp oracle by the
+      differential grids in ``tests/test_kernels.py``.
     """
     bs = pool_k.shape[1]
     idx = jnp.asarray(cache_len, jnp.int32).reshape(-1)     # (B,)

@@ -473,7 +473,15 @@ class ServingEngine:
                         "spec_proposed": 0, "spec_accepted": 0,
                         "spec_blocks_rolled_back": 0,
                         "chunked_admissions": 0, "chunk_steps": 0,
-                        "chunk_prefill_tokens": 0, "cancelled": 0}
+                        "chunk_prefill_tokens": 0, "cancelled": 0,
+                        # Pallas paged-attention dispatch accounting
+                        # (use_kernel=True only): fused multi-token
+                        # window launches (verify + chunk) vs the total
+                        # real query positions fed through the kernel
+                        # (1 per active row on a plain decode tick) —
+                        # Prometheus tells fused-window from
+                        # single-token launches by these two series
+                        "kernel_windows": 0, "kernel_positions": 0}
 
     # ---------------------------------------------------------- telemetry
     def _trace_admit(self, req: Request, slot: int, *,
@@ -1420,6 +1428,10 @@ class ServingEngine:
             toks[i, 1:] = proposed[i]
             n_write[i] = n_spec[i] + 1
         ns = jnp.asarray(np.asarray(n_spec, np.int32))
+        if self.paged and self.use_kernel:
+            self.metrics["kernel_windows"] += 1
+            self.metrics["kernel_positions"] += int(
+                sum(n_write[i] for i in active))
         if self.paged:
             a, out_toks, lps, self.caches = self._verify(
                 self.params, jnp.asarray(toks), self.caches,
@@ -1523,6 +1535,9 @@ class ServingEngine:
             n_write[i] = c
             last[i] = c - 1
         temps, top_ks, seeds, ctrs = self._sampling_slots()
+        if self.paged and self.use_kernel:
+            self.metrics["kernel_windows"] += 1
+            self.metrics["kernel_positions"] += sum(n_fed.values())
         if self.paged:
             nxt, logp, self.caches = self._chunk_fn(
                 self.params, jnp.asarray(toks), self.caches,
@@ -1659,6 +1674,8 @@ class ServingEngine:
             else:
                 tok[i, 0] = r.out_tokens[-1]
         samp = self._sampling_slots()
+        if self.paged and self.use_kernel:
+            self.metrics["kernel_positions"] += len(active)
         if self.paged:
             nxt, logp, self.caches = self._decode(
                 self.params, jnp.asarray(tok), self.caches,

@@ -112,7 +112,9 @@ def test_chunked_matches_monolithic_stripe(stack):
 
 def test_chunked_matches_monolithic_kernel(stack):
     """Chunk windows through the Pallas paged-attention read (interpret
-    mode on CPU): kernel replay per window position, streams unchanged."""
+    mode on CPU): ONE fused multi-token kernel launch per chunk tick —
+    causal-in-window masking, per-row base lengths — streams unchanged
+    versus a monolithic gather-path engine."""
     cfg, model, params = stack
     lens = [21, 9, 30]
     a, b = _reqs(cfg, lens, max_new=4), _reqs(cfg, lens, max_new=4)
@@ -123,6 +125,64 @@ def test_chunked_matches_monolithic_kernel(stack):
     mono.run(list(a))
     chunked.run(list(b))
     _streams_equal(a, b)
+
+
+@pytest.mark.parametrize("chunk,block", [(7, 8), (12, 8), (5, 4)])
+def test_chunked_kernel_vs_gather_grid(stack, chunk, block):
+    """Kernel-vs-gather grid for chunk windows: the fused Pallas window
+    kernel and the portable jnp gather path emit identical token
+    streams across chunk widths that divide neither the prompts nor
+    the block size (boundaries land mid-block), with logprobs agreeing
+    to float tolerance and the kernel dispatch counters live."""
+    cfg, model, params = stack
+    lens = [23, 9, 34]
+    a, b = _reqs(cfg, lens, max_new=4), _reqs(cfg, lens, max_new=4)
+    gather = ServingEngine(model, params, batch_size=3, max_seq=64,
+                           block_size=block, use_kernel=False,
+                           prefill_chunk=chunk)
+    kern = ServingEngine(model, params, batch_size=3, max_seq=64,
+                         block_size=block, use_kernel=True,
+                         prefill_chunk=chunk)
+    gather.run(list(a))
+    kern.run(list(b))
+    _streams_equal(a, b)
+    assert kern.metrics["chunk_steps"] > 0
+    assert kern.metrics["kernel_windows"] > 0
+    assert kern.metrics["kernel_positions"] >= kern.metrics["kernel_windows"]
+    assert gather.metrics["kernel_windows"] == 0
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x.out_logprobs, y.out_logprobs,
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_park_resume_between_chunks_kernel_vs_gather(stack):
+    """Park/resume between chunks on the kernel path: decode growth
+    steals the headroom mid-prompt, parking or preempting the
+    half-prefilled slot; the resumed windows flow through the fused
+    kernel and every stream equals the gather engine's."""
+    cfg, model, params = stack
+
+    def run(use_kernel):
+        (short,) = _reqs(cfg, [6], max_new=24, seed=11)
+        (lng,) = _reqs(cfg, [36], max_new=6, seed=12)
+        eng = ServingEngine(model, params, batch_size=2, max_seq=64,
+                            block_size=4, num_blocks=13, prefill_chunk=8,
+                            use_kernel=use_kernel)
+        assert eng.add_requests([short]) == 1
+        eng.step()
+        assert eng.add_requests([lng]) == 1
+        done = eng.run([])
+        assert len(done) == 2
+        # 12 allocatable blocks cannot hold both at full length:
+        # contention between chunks actually happened
+        assert eng.metrics["parked_slot_steps"] > 0 \
+            or eng.metrics["preemptions"] > 0
+        return eng, short, lng
+
+    _, gs, gl = run(False)
+    keng, ks_, kl = run(True)
+    assert keng.metrics["kernel_windows"] > 0
+    _streams_equal([gs, gl], [ks_, kl])
 
 
 def test_chunked_matches_monolithic_speculative(stack):

@@ -263,6 +263,133 @@ def test_paged_attention_serving_path_kernel_vs_gather():
                                rtol=3e-5)
 
 
+# ------------------------------------------------- fused window attention
+from repro.kernels.paged_attention.ops import (  # noqa: E402
+    paged_window_attention as paged_window)
+from repro.kernels.paged_attention.ref import (  # noqa: E402
+    gathered_window_ref, paged_window_attention_ref)
+
+
+def _window_case(B, S, Hq, Hkv, hd, bs, max_blocks, dt, *, seed=0):
+    """Window variant of ``_paged_case``: each row holds a ragged base
+    length (including 0 — a chunked-prefill first chunk) and owns
+    blocks covering ``base + S`` tokens, i.e. the window's K/V is
+    already scattered into the pool; table tails stay at scratch."""
+    nb = B * max_blocks + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dt)
+    pool_k = jax.random.normal(ks[1], (nb, bs, Hkv, hd), dt)
+    pool_v = jax.random.normal(ks[2], (nb, bs, Hkv, hd), dt)
+    rng = np.random.default_rng(seed + B * 1000 + S * 100 + hd)
+    free = list(rng.permutation(np.arange(1, nb)))
+    base = np.zeros(B, np.int32)
+    table = np.zeros((B, max_blocks), np.int32)
+    for b in range(B):
+        base[b] = int(rng.integers(0, max_blocks * bs - S + 1))
+        for i in range(-(-int(base[b] + S) // bs)):
+            table[b, i] = free.pop()
+    return q, pool_k, pool_v, jnp.asarray(table), jnp.asarray(base)
+
+
+# q_len x active-slot count x heads x head_dim x block_size x window x
+# dtype; ragged per-row base lengths (incl. mid-block boundaries and
+# base = 0) come from _window_case's rng
+WINDOW_GRID = [
+    (1, 2, 8, 2, 64, 16, 4, 0, jnp.float32),   # degenerate decode shape
+    (2, 3, 4, 4, 32, 8, 6, 0, jnp.float32),    # MHA, small blocks
+    (2, 2, 8, 2, 64, 16, 4, 0, jnp.float32),   # GQA
+    (4, 2, 8, 2, 64, 16, 4, 0, jnp.float32),
+    (4, 3, 4, 1, 64, 8, 6, 0, jnp.float32),    # MQA
+    (8, 2, 4, 2, 64, 16, 4, 0, jnp.float32),
+    (8, 2, 4, 4, 32, 8, 8, 0, jnp.float32),
+    (4, 2, 8, 2, 64, 16, 5, 24, jnp.float32),  # sliding window
+    (4, 2, 8, 2, 64, 16, 4, 0, jnp.bfloat16),
+    (8, 2, 4, 2, 32, 8, 8, 12, jnp.bfloat16),  # window + bf16
+]
+
+
+@pytest.mark.parametrize("S,B,Hq,Hkv,hd,bs,mb,win,dt", WINDOW_GRID)
+def test_paged_window_kernel_differential(S, B, Hq, Hkv, hd, bs, mb, win,
+                                          dt):
+    """The fused multi-token grid: one kernel launch covering S window
+    queries per row with causal-in-window masking and per-row base
+    lengths, against the streaming oracle (f32: out <= 4 ulp / lse <=
+    32 ulp, same contract as the decode grid) and the independent
+    gather-then-softmax oracle (dtype-tiered tolerance)."""
+    q, pk, pv, table, base = _window_case(B, S, Hq, Hkv, hd, bs, mb, dt)
+    out, lse = paged_window(q, pk, pv, table, base, sliding_window=win)
+    ro, rl = paged_window_attention_ref(q, pk, pv, table, base,
+                                        sliding_window=win)
+    go, gl = gathered_window_ref(q, pk, pv, table, base, sliding_window=win)
+    if dt == jnp.float32:
+        _assert_ulp(out, ro, 4)
+        _assert_ulp(lse, rl, 32)
+    else:
+        np.testing.assert_allclose(np.float32(out), np.float32(ro),
+                                   atol=tol(dt), rtol=tol(dt))
+        np.testing.assert_allclose(np.float32(lse), np.float32(rl),
+                                   atol=tol(dt), rtol=tol(dt))
+    np.testing.assert_allclose(np.float32(out), np.float32(go),
+                               atol=tol(dt), rtol=tol(dt))
+    np.testing.assert_allclose(np.float32(lse), np.float32(gl),
+                               atol=tol(dt), rtol=tol(dt))
+
+
+def test_paged_window_kernel_decode_degenerate():
+    """S = 1 windows run the *same* tile shapes and op order as plain
+    decode — the fused kernel at q_len 1 is bitwise identical to
+    ``paged_decode_attention``, so serving one kernel to all three
+    consumers costs decode nothing."""
+    q, pk, pv, table, lens = _paged_case(3, 8, 2, 64, 16, 4, jnp.float32)
+    od, ld = paged_decode(q, pk, pv, table, lens)
+    ow, lw = paged_window(q[:, None], pk, pv, table, lens - 1)
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(ow[:, 0]))
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(lw[:, 0]))
+
+
+def test_paged_window_kernel_ignores_scratch_garbage():
+    """Scratch poisoning, window edition: unowned table tails point at
+    scratch block 0 whose contents are garbage by design — poisoning it
+    must not perturb any window output bit."""
+    q, pk, pv, table, base = _window_case(3, 4, 8, 2, 64, 16, 4,
+                                          jnp.float32)
+    out, lse = paged_window(q, pk, pv, table, base)
+    out2, lse2 = paged_window(q, pk.at[0].set(1e9), pv.at[0].set(-1e9),
+                              table, base)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(lse), np.asarray(lse2))
+
+
+def test_paged_verify_serving_path_kernel_vs_gather():
+    """Through the serving entry point (`attention.paged_verify_attention`
+    with the scatter and n_write scratch-diversion): kernel and gather
+    paths must leave every *owned* pool block bitwise identical and
+    agree on every window position the engine can commit (positions
+    past a row's n_write read diverted garbage and are never
+    committed — acceptance is capped below them)."""
+    from repro.models.attention import paged_verify_attention as sv
+    B, S, Hq, Hkv, hd, bs, mb = 3, 4, 8, 2, 64, 8, 6
+    q, pk, pv, table, base = _window_case(B, S, Hq, Hkv, hd, bs, mb,
+                                          jnp.float32, seed=3)
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    k_new = jax.random.normal(ks[0], (B, S, Hkv, hd))
+    v_new = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    # full window / partial grant / parked rider (all writes diverted)
+    n_write = jnp.asarray([S, 2, 0], jnp.int32)
+    o_g, pk_g, pv_g = sv(q, pk, pv, k_new, v_new, table, base, n_write,
+                         use_kernel=False)
+    o_k, pk_k, pv_k = sv(q, pk, pv, k_new, v_new, table, base, n_write,
+                         use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(pk_g)[1:], np.asarray(pk_k)[1:])
+    np.testing.assert_array_equal(np.asarray(pv_g)[1:], np.asarray(pv_k)[1:])
+    og = np.float32(o_g).reshape(B, S, Hq, hd)
+    ok = np.float32(o_k).reshape(B, S, Hq, hd)
+    for b in range(B):
+        c = int(n_write[b])
+        np.testing.assert_allclose(ok[b, :c], og[b, :c], atol=3e-5,
+                                   rtol=3e-5)
+
+
 # ---------------------------------------------------------------- ssm scan
 from repro.kernels.ssm_scan.ops import selective_scan as pallas_ssm  # noqa: E402
 from repro.kernels.ssm_scan.ref import ssm_scan_ref  # noqa: E402

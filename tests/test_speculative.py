@@ -141,8 +141,9 @@ def _paged_setup(model, params, toks, bs, num_blocks):
 @pytest.mark.parametrize("use_kernel", [False, True],
                          ids=["gather", "kernel"])
 def test_verify_matches_sequential_decode_paged(stack, use_kernel):
-    """The paged verify (jnp gather AND the per-position Pallas kernel
-    replay, interpret mode on CPU) against sequential paged decode."""
+    """The paged verify (jnp gather AND the fused multi-token Pallas
+    window kernel — ONE launch for the whole verify window, interpret
+    mode on CPU) against sequential paged decode."""
     cfg, model, params = stack
     B, P, S, bs = 2, 10, 3, 4
     toks = jax.random.randint(jax.random.key(5), (B, P), 2, cfg.vocab_size)

@@ -370,6 +370,37 @@ def test_streams_bit_identical_with_tracing_enabled(stack, config):
                    for e in spec)
 
 
+# ---------------------------------------------- kernel dispatch counters
+def test_kernel_dispatch_counters_reach_prometheus(stack):
+    """`kernel_windows` counts fused multi-token launches (verify +
+    chunk ticks) and `kernel_positions` the total real query positions
+    through the paged kernel — so a Prometheus scrape tells fused-window
+    launches from single-token decode launches. Gather-path engines
+    must leave both at zero."""
+    cfg, model, params = stack
+    prompts = _prompts(cfg, [20, 9], seed=21)
+    eng = ServingEngine(model, params, batch_size=2, max_seq=MAX_SEQ,
+                        block_size=8, use_kernel=True, prefill_chunk=8)
+    eng.run([Request(rid=i, prompt=list(p), max_new_tokens=4)
+             for i, p in enumerate(prompts)])
+    # chunk ticks ran fused windows; decode ticks added 1 position per
+    # active row with no window launch
+    assert eng.metrics["kernel_windows"] > 0
+    assert eng.metrics["chunk_steps"] >= eng.metrics["kernel_windows"]
+    assert eng.metrics["kernel_positions"] > eng.metrics["kernel_windows"]
+    reg = MetricsRegistry(labels={"replica": "lm/0"})
+    reg.source("engine", lambda: eng.metrics)
+    text = reg.prometheus_text()
+    assert 'engine_kernel_windows{replica="lm/0"}' in text
+    assert 'engine_kernel_positions{replica="lm/0"}' in text
+    gather = ServingEngine(model, params, batch_size=2, max_seq=MAX_SEQ,
+                           block_size=8, use_kernel=False, prefill_chunk=8)
+    gather.run([Request(rid=10 + i, prompt=list(p), max_new_tokens=4)
+                for i, p in enumerate(prompts)])
+    assert gather.metrics["kernel_windows"] == 0
+    assert gather.metrics["kernel_positions"] == 0
+
+
 # ------------------------------------------------- service-level scrape
 def test_service_and_supervisor_prometheus_exposition(stack):
     from repro.core.supervisor import Supervisor
